@@ -1,0 +1,56 @@
+"""Empirical check of the paper's probabilistic bounds (Thms 1 and 2)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, twitter_like
+from repro.core import sketch as sk
+
+KEY = jax.random.PRNGKey(0)
+
+
+def bounds_check() -> None:
+    stream = twitter_like()
+    L = stream.total
+    h, w = 4096, 4
+    t0 = time.perf_counter()
+    qi, qf = stream.random_k_queries(2000, np.random.default_rng(0))
+
+    # Thm 1 (Count-Min): P[est > true + eps*L] <= (1/(h*eps))^w
+    eps = 4.0 / h
+    cm = sk.count_min_spec(stream.schema, h, w)
+    st = sk.build_sketch(cm, KEY, stream.items, stream.freqs)
+    est = np.asarray(sk.query_jit(cm, st, jnp.asarray(qi)))
+    viol_cm = float(np.mean(est > qf + eps * L))
+    bound_cm = (1.0 / (h * eps)) ** w
+
+    # Thm 2 (MOD): est <= true + [L + O(*,x2)*b + O(x1,*)*a] * eps'
+    a, b = 64, 64
+    eps2 = 12.0 / (a * b)
+    mod = sk.mod_sketch_spec(stream.schema, [(0,), (1,)], (a, b), w)
+    st2 = sk.build_sketch(mod, KEY, stream.items, stream.freqs)
+    est2 = np.asarray(sk.query_jit(mod, st2, jnp.asarray(qi)))
+    from repro.streams.stats import exact_marginals
+    o1 = exact_marginals(stream.items, stream.freqs, [0])
+    o2 = exact_marginals(stream.items, stream.freqs, [1])
+    # align marginals with the queried rows
+    import numpy as _np
+    packed = stream.items[:, 0].astype(_np.uint64) << _np.uint64(32) | stream.items[:, 1]
+    qpacked = qi[:, 0].astype(_np.uint64) << _np.uint64(32) | qi[:, 1]
+    idx = {int(k): i for i, k in enumerate(packed)}
+    rows = _np.array([idx[int(k)] for k in qpacked])
+    slack = (L + o2[rows] * b + o1[rows] * a) * eps2
+    viol_mod = float(np.mean(est2 > qf + slack))
+    bound_mod = (3.0 / (a * b * eps2)) ** w
+    us = (time.perf_counter() - t0) * 1e6
+    emit("bounds_thm1_thm2", us,
+         f"thm1_viol={viol_cm:.4f}<=bound={bound_cm:.4f};"
+         f"thm2_viol={viol_mod:.4f}<=bound={bound_mod:.4f};"
+         f"holds={viol_cm <= bound_cm + 0.01 and viol_mod <= bound_mod + 0.01}")
+
+
+ALL = [bounds_check]

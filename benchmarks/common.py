@@ -1,0 +1,74 @@
+"""Shared benchmark machinery: streams, sketch evaluation, CSV emission."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.core.range_opt import optimal_ranges_mod2
+from repro.streams import (
+    Stream,
+    ipv4_stream,
+    observed_error,
+    reinterpret_modularity,
+    zipf_graph_stream,
+)
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@functools.lru_cache(maxsize=None)
+def twitter_like() -> Stream:
+    """Mild-skew graph stream, #targets ~ 3x #sources (Table III shape),
+    heavy overload distinct/h like the paper's Twitter (~78x at h=1e6)."""
+    return zipf_graph_stream(n_src=20_000, n_tgt=60_000, n_edges=400_000,
+                             n_occurrences=2_000_000, s_src=0.7, s_tgt=0.7,
+                             seed=0, name="twitter-like")
+
+
+@functools.lru_cache(maxsize=None)
+def ipv4_like(which: int = 1) -> Stream:
+    """#sources ~ 10x #targets (CAIDA probing shape)."""
+    return ipv4_stream(n_src_hosts=30_000, n_tgt_hosts=3_000, n_pairs=120_000,
+                       n_occurrences=2_000_000, seed=which,
+                       name=f"ipv4-{which}-like")
+
+
+def sketch_error(spec: sk.SketchSpec, stream: Stream, key,
+                 queries: Tuple[np.ndarray, np.ndarray]) -> float:
+    state = sk.build_sketch(spec, key, stream.items, stream.freqs)
+    qi, qf = queries
+    est = np.asarray(sk.query_jit(spec, state, jnp.asarray(qi)))
+    return observed_error(est, qf)
+
+
+def standard_specs(stream: Stream, h: int, w: int, sample_frac: float = 0.02,
+                   seed: int = 0) -> Dict[str, sk.SketchSpec]:
+    rng = np.random.default_rng(seed)
+    s_items, s_freqs = stream.sample(sample_frac, rng)
+    a, b = optimal_ranges_mod2(s_items, s_freqs, h)
+    return {
+        "count-min": sk.count_min_spec(stream.schema, h, w),
+        "equal-sketch": sk.equal_sketch_spec(stream.schema, h, w),
+        "mod-sketch": sk.mod_sketch_spec(stream.schema, [(0,), (1,)], (a, b), w),
+    }
+
+
+def timed(fn, *args, repeat: int = 3, **kw) -> Tuple[float, object]:
+    out = fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return dt * 1e6, out

@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On this container the Pallas body runs interpreted (Python), so the wall
+times below measure the REFERENCE path's throughput and validate kernel
+equivalence at realistic shapes; the MXU-utilisation claims live in the
+roofline analysis.  On TPU, set interpret=False and re-run.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import sketch as sk
+from repro.core.hashing import KeySchema
+from repro.kernels import ref
+from repro.kernels.hashes import make_plan
+from repro.kernels.sketch_update import padded_table_size, sketch_update_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def kernel_update_equivalence() -> None:
+    rng = np.random.default_rng(0)
+    schema = KeySchema(domains=(1 << 32, 1 << 32))
+    spec = sk.mod_sketch_spec(schema, [(0,), (1,)], (1024, 1024), 5)
+    plan = make_plan(spec)
+    params = sk.init_params(spec, KEY)
+    b = 4096
+    items = rng.integers(0, 1 << 32, size=(b, 2), dtype=np.uint64).astype(np.uint32)
+    freqs = rng.integers(1, 100, size=(b,)).astype(np.int32)
+    chunks = schema.module_chunks(jnp.asarray(items))
+    h_pad = padded_table_size(spec.table_size, 512)
+    t0 = jnp.zeros((spec.width, h_pad), jnp.int32)
+
+    us_ref, want = timed(lambda: jax.block_until_ready(
+        ref.sketch_update_ref(plan, t0, chunks, jnp.asarray(freqs),
+                              params.q, params.r)))
+    t_int0 = time.perf_counter()
+    got = sketch_update_pallas(plan, t0, chunks, jnp.asarray(freqs),
+                               params.q, params.r, tile_h=512, interpret=True)
+    t_int = time.perf_counter() - t_int0
+    exact = bool((np.asarray(got) == np.asarray(want)).all())
+    emit("kernel_update_ref_path", us_ref,
+         f"items_per_s={b / (us_ref / 1e6):.3e};pallas_interpret_exact={exact};"
+         f"interpret_s={t_int:.1f}")
+
+
+def kernel_vmem_budget() -> None:
+    """Structural check: worst-case VMEM working set of the update kernel."""
+    b, tile_h, c = 1024, 512, 4
+    onehot = b * tile_h * 4
+    chunks = b * c * 4
+    freqs = 2 * b * 4
+    tile = tile_h * 4
+    total = onehot + chunks + freqs + tile
+    emit("kernel_vmem_budget", 0.0,
+         f"bytes={total};mb={total / 2**20:.2f};fits_16mb_vmem={total < 16 * 2**20}")
+
+
+ALL = [kernel_update_equivalence, kernel_vmem_budget]

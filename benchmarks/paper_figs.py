@@ -1,0 +1,236 @@
+"""Benchmarks reproducing each paper table/figure (SVI), scaled to one core.
+
+Every function prints ``name,us_per_call,derived`` CSV rows (benchmarks.run
+is the driver).  The ``derived`` column carries the figure's metric
+(observed error / seconds / items-per-second), so EXPERIMENTS.md quotes
+these rows directly.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    emit,
+    ipv4_like,
+    sketch_error,
+    standard_specs,
+    timed,
+    twitter_like,
+)
+from repro.core import sketch as sk
+from repro.core.exhaustive import exhaustive_config
+from repro.core.fcm import FCM, fcm_spec, fmod_spec
+from repro.core.greedy import greedy_config
+from repro.core.partition import bell_number
+from repro.core.range_opt import estimate_alpha, optimal_ranges_mod2, split_range
+from repro.streams import reinterpret_modularity
+
+KEY = jax.random.PRNGKey(0)
+
+
+def table1_bell() -> None:
+    """Table I: T(n) vs 2^n."""
+    t0 = time.perf_counter()
+    vals = {n: bell_number(n) for n in range(1, 12)}
+    us = (time.perf_counter() - t0) * 1e6
+    expect = {1: 1, 2: 2, 3: 5, 4: 15, 5: 52, 6: 203, 7: 877, 8: 4140,
+              9: 21147, 10: 115975, 11: 678570}
+    ok = vals == expect
+    emit("table1_bell", us, f"match_paper={ok};T8={vals[8]};T11={vals[11]}")
+
+
+def fig4_accuracy_vs_k() -> None:
+    """Fig 4: observed error vs k (top-k and random-k), modularity 2."""
+    for stream in (twitter_like(), ipv4_like(1)):
+        h, w = 4096, 5
+        t0 = time.perf_counter()
+        specs = standard_specs(stream, h, w)
+        us = (time.perf_counter() - t0) * 1e6
+        rng = np.random.default_rng(0)
+        for k in (100, 1000):
+            for qname, queries in (
+                ("top", stream.top_k_queries(k)),
+                ("rand", stream.random_k_queries(k, rng)),
+            ):
+                errs = {n: sketch_error(s, stream, KEY, queries)
+                        for n, s in specs.items()}
+                best = min(errs, key=errs.get)
+                emit(f"fig4_{stream.name}_{qname}{k}", us,
+                     ";".join(f"{n}={e:.4f}" for n, e in errs.items())
+                     + f";best={best}")
+
+
+def fig5_sample_size() -> None:
+    """Fig 5: MOD error converges by ~2% sample."""
+    stream = twitter_like()
+    h, w = 4096, 5
+    queries = stream.top_k_queries(500)
+    for frac in (0.005, 0.01, 0.02, 0.04):
+        rng = np.random.default_rng(1)
+        t0 = time.perf_counter()
+        s_items, s_freqs = stream.sample(frac, rng)
+        a, b = optimal_ranges_mod2(s_items, s_freqs, h)
+        us = (time.perf_counter() - t0) * 1e6
+        err = sketch_error(sk.mod_sketch_spec(stream.schema, [(0,), (1,)],
+                                              (a, b), w), stream, KEY, queries)
+        emit(f"fig5_sample{frac}", us, f"err={err:.4f};a={a};b={b}")
+
+
+def fig6_param_search_time() -> None:
+    """Fig 6: time to find parameters, MOD vs Exhaustive (mod 2)."""
+    stream = twitter_like()
+    rng = np.random.default_rng(2)
+    s_items, s_freqs = stream.sample(0.02, rng)
+    h, w = 4096, 5
+    t0 = time.perf_counter()
+    a, b = optimal_ranges_mod2(s_items, s_freqs, h)
+    t_mod = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ex = exhaustive_config(s_items, s_freqs, stream.schema, h, w, KEY, grid=9)
+    t_ex = time.perf_counter() - t0
+    emit("fig6_param_time", t_mod * 1e6,
+         f"mod_s={t_mod:.2f};exhaustive_s={t_ex:.2f};"
+         f"speedup={t_ex / max(t_mod, 1e-9):.1f}x;"
+         f"mod_ab=({a},{b});ex={'x'.join(map(str, ex.spec.ranges))}")
+
+
+def fig7_modularity_4_8() -> None:
+    """Fig 7: error at modularity 4/8 with varying w."""
+    base = ipv4_like(1)
+    for mod in (4, 8):
+        stream = reinterpret_modularity(base, mod)
+        rng = np.random.default_rng(3)
+        s_items, s_freqs = stream.sample(0.03, rng)
+        h = 4096
+        queries = stream.top_k_queries(300)
+        for w in (3, 5):
+            t0 = time.perf_counter()
+            g = greedy_config(s_items, s_freqs, stream.schema, h, w, KEY)
+            us = (time.perf_counter() - t0) * 1e6
+            errs = {
+                "count-min": sketch_error(
+                    sk.count_min_spec(stream.schema, h, w), stream, KEY, queries),
+                "equal-sketch": sketch_error(
+                    sk.equal_sketch_spec(stream.schema, h, w), stream, KEY, queries),
+                "mod-sketch": sketch_error(g.spec, stream, KEY, queries),
+            }
+            emit(f"fig7_mod{mod}_w{w}", us,
+                 ";".join(f"{n}={e:.4f}" for n, e in errs.items())
+                 + f";greedy_cfg={g.spec.describe()}")
+
+
+def fig8_throughput() -> None:
+    """Fig 8: stream update throughput (items/s), h = 4e6 class."""
+    stream = twitter_like()
+    h, w = 1 << 20, 5
+    n = min(200_000, len(stream.items))
+    items = jnp.asarray(stream.items[:n])
+    freqs = jnp.asarray(stream.freqs[:n].astype(np.int32))
+    for name, spec in standard_specs(stream, h, w).items():
+        state = sk.init_state(spec, KEY)
+        us, state = timed(
+            lambda: jax.block_until_ready(sk.update_jit(spec, state, items,
+                                                        freqs)))
+        emit(f"fig8_throughput_{name}", us,
+             f"items_per_s={n / (us / 1e6):.3e}")
+
+
+def fig9_greedy_vs_exhaustive() -> None:
+    """Fig 9: config-search efficiency at high modularity."""
+    base = ipv4_like(2)
+    for mod in (4, 8):
+        stream = reinterpret_modularity(base, mod)
+        rng = np.random.default_rng(4)
+        s_items, s_freqs = stream.sample(0.02, rng)
+        t0 = time.perf_counter()
+        g = greedy_config(s_items, s_freqs, stream.schema, 4096, 4, KEY)
+        t_g = time.perf_counter() - t0
+        if mod <= 4:
+            t0 = time.perf_counter()
+            exhaustive_config(s_items, s_freqs, stream.schema, 4096, 4, KEY)
+            t_ex = time.perf_counter() - t0
+            extra = f"exhaustive_s={t_ex:.1f};ratio={t_ex / t_g:.1f}x"
+        else:
+            extra = (f"exhaustive=DNF(T({mod})={bell_number(mod)} partitions; "
+                     "paper: >100h)")
+        emit(f"fig9_mod{mod}", t_g * 1e6,
+             f"greedy_s={t_g:.1f};candidates={g.n_candidates};{extra}")
+
+
+def fig10_fcm_fmod() -> None:
+    """Fig 10: generality -- MOD on top of FCM (paper regime: overload +
+    tail queries, where composite indexing helps; see EXPERIMENTS SRepro)."""
+    stream = twitter_like()
+    h, w = 2048, 6
+    rng = np.random.default_rng(5)
+    s_items, s_freqs = stream.sample(0.03, rng)
+    a, b = optimal_ranges_mod2(s_items, s_freqs, h)
+    queries = stream.random_k_queries(500, rng)
+
+    t0 = time.perf_counter()
+    cm_err = sketch_error(sk.count_min_spec(stream.schema, h, w), stream, KEY,
+                          queries)
+    mod_err = sketch_error(sk.mod_sketch_spec(stream.schema, [(0,), (1,)],
+                                              (a, b), w), stream, KEY, queries)
+    fcm = FCM(fcm_spec(stream.schema, h, w, mg_k=512), KEY)
+    fmod = FCM(fmod_spec(stream.schema, [(0,), (1,)], (a, b), w, mg_k=512), KEY)
+    for s in range(0, len(stream.items), 1 << 15):
+        fcm.update(stream.items[s:s + (1 << 15)], stream.freqs[s:s + (1 << 15)])
+        fmod.update(stream.items[s:s + (1 << 15)], stream.freqs[s:s + (1 << 15)])
+    from repro.streams import observed_error
+    qi, qf = queries
+    fcm_err = observed_error(fcm.query(qi), qf)
+    fmod_err = observed_error(fmod.query(qi), qf)
+    us = (time.perf_counter() - t0) * 1e6
+    emit("fig10_fcm", us,
+         f"count-min={cm_err:.4f};mod={mod_err:.4f};fcm={fcm_err:.4f};"
+         f"fmod={fmod_err:.4f}")
+
+
+def fig11_aggregates() -> None:
+    """Fig 11: median vs min/max/average alpha aggregation."""
+    stream = twitter_like()
+    h, w = 4096, 5
+    rng = np.random.default_rng(6)
+    s_items, s_freqs = stream.sample(0.02, rng)
+    queries = stream.top_k_queries(100)
+    out = []
+    t0 = time.perf_counter()
+    for agg in ("median", "mean", "min", "max"):
+        alpha = estimate_alpha(s_items, s_freqs, [0], [1], agg)
+        a, b = split_range(h, 1.0 / alpha)
+        err = sketch_error(sk.mod_sketch_spec(stream.schema, [(0,), (1,)],
+                                              (a, b), w), stream, KEY, queries)
+        out.append(f"{agg}={err:.4f}")
+    us = (time.perf_counter() - t0) * 1e6
+    emit("fig11_aggregates", us, ";".join(out))
+
+
+def marginal_queries() -> None:
+    """Beyond-figure: subspace queries (gMatrix/TCM capability the paper
+    cites as composite hashing's motivation) -- O(x1,*) from b cells/row."""
+    stream = ipv4_like(1)
+    spec = sk.mod_sketch_spec(stream.schema, [(0,), (1,)], (256, 64), 5)
+    state = sk.build_sketch(spec, KEY, stream.items, stream.freqs)
+    srcs = np.unique(stream.items[:, 0])[:500].reshape(-1, 1)
+    t0 = time.perf_counter()
+    est = np.asarray(sk.query_marginal(spec, state, 0, jnp.asarray(srcs)))
+    us = (time.perf_counter() - t0) * 1e6
+    from repro.streams.stats import exact_marginals
+    o1 = exact_marginals(stream.items, stream.freqs, [0])
+    lut = {int(i): m for i, m in zip(stream.items[:, 0], o1)}
+    true = np.array([lut[int(v)] for v in srcs[:, 0]])
+    corr = float(np.corrcoef(est, true)[0, 1])
+    over = bool((est >= true - 1e-6).all())
+    emit("marginal_query_src", us, f"corr={corr:.3f};overestimate={over};"
+         f"n=500;note=CM cannot answer without key enumeration")
+
+
+ALL = [table1_bell, fig4_accuracy_vs_k, fig5_sample_size,
+       fig6_param_search_time, fig7_modularity_4_8, fig8_throughput,
+       fig9_greedy_vs_exhaustive, fig10_fcm_fmod, fig11_aggregates,
+       marginal_queries]

@@ -1,0 +1,56 @@
+"""Roofline report: aggregate the dry-run cell JSONs into the SRoofline table.
+
+Reads benchmarks/results/dryrun/*.json (produced by repro.launch.dryrun) and
+emits one CSV row per cell plus markdown tables for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_cells(variant: str = "baseline") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{variant}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_rows(variant: str = "baseline") -> None:
+    for c in load_cells(variant):
+        emit(
+            f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}",
+            c["compile_s"] * 1e6,
+            f"bottleneck={c['bottleneck']};t_comp={c['t_compute_s']:.3e};"
+            f"t_mem={c['t_memory_s']:.3e};t_coll={c['t_collective_s']:.3e};"
+            f"useful={c['useful_flops_frac']:.3f};"
+            f"roofline_frac={c['roofline_frac']:.4f}",
+        )
+
+
+def markdown_table(variant: str = "baseline", mesh: str = "pod16x16") -> str:
+    rows = [c for c in load_cells(variant) if c["mesh"] == mesh]
+    rows.sort(key=lambda c: (c["arch"], c["shape"]))
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+           "useful | roofline |",
+           "|---|---|---|---|---|---|---|---|"]
+    for c in rows:
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {c['t_compute_s']:.2e} | "
+            f"{c['t_memory_s']:.2e} | {c['t_collective_s']:.2e} | "
+            f"{c['bottleneck']} | {c['useful_flops_frac']:.2f} | "
+            f"{c['roofline_frac']:.4f} |")
+    return "\n".join(out)
+
+
+ALL = [roofline_rows]
+
+if __name__ == "__main__":
+    print(markdown_table())

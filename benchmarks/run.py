@@ -1,0 +1,42 @@
+"""Benchmark driver: one function per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV (see benchmarks.common.emit).
+Usage: PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run benchmarks whose name contains this substring")
+    args = ap.parse_args()
+
+    from benchmarks import bounds_check, kernel_microbench, paper_figs, roofline_report
+    benches = (paper_figs.ALL + bounds_check.ALL + kernel_microbench.ALL
+               + roofline_report.ALL)
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in benches:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"{fn.__name__},-1,ERROR", flush=True)
+            traceback.print_exc()
+        print(f"# {fn.__name__} finished in {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr, flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

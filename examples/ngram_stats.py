@@ -1,0 +1,49 @@
+"""LM-framework integration: MOD-Sketch n-gram statistics during training.
+
+    PYTHONPATH=src python examples/ngram_stats.py
+
+Trains a reduced gemma2 for a few dozen steps; the train step folds every
+batch's bigrams into a MOD-Sketch *inside the jitted step* (zero extra data
+passes).  Afterwards the sketch answers corpus-frequency queries, compared
+against exact counts collected on the host.
+"""
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import sketch as sk
+from repro.training import train_loop as tl
+from repro.training.optimizer import OptimizerConfig
+
+cfg = get_reduced("gemma2-9b")
+tcfg = tl.TrainConfig(optimizer=OptimizerConfig(lr=1e-3, total_steps=60))
+steps, batch, seq = 40, 8, 64
+
+state = tl.init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+step_fn = jax.jit(tl.make_train_step(cfg, tcfg))
+data = tl.synthetic_batches(cfg, batch, seq)
+
+exact = collections.Counter()
+for s in range(steps):
+    b = data(s)
+    toks = b["tokens"]
+    for row in toks:
+        exact.update(zip(row[:-1].tolist(), row[1:].tolist()))
+    state, metrics = step_fn(state, {"tokens": jnp.asarray(toks)})
+print(f"trained {steps} steps, loss={float(metrics['loss']):.3f}")
+
+spec = tl.make_sketch_spec(cfg)
+sketch_state = sk.SketchState(params=state["sketch_params"],
+                              table=state["sketch_table"])
+top = exact.most_common(10)
+grams = np.array([g for g, _ in top], dtype=np.uint32)
+est = np.asarray(sk.query_jit(spec, sketch_state, jnp.asarray(grams)))
+print(f"{'bigram':>16s} {'exact':>8s} {'sketch':>8s}")
+for (g, c), e in zip(top, est):
+    print(f"{str(g):>16s} {c:8d} {int(e):8d}")
+over = np.mean([int(e) - c for (g, c), e in zip(top, est)])
+print(f"mean overestimate on top-10: {over:.1f} "
+      f"(sketch never underestimates; total mass {int(np.asarray(sketch_state.table).sum() // spec.width):,})")

@@ -1,0 +1,24 @@
+"""MOD-Sketch core: composite hashing for data-stream sketches (the paper's
+contribution), plus the Count-Min / Equal-Sketch / FCM baselines and the
+distributed (mesh-sharded) runtime."""
+from repro.core.hashing import KeySchema, P31  # noqa: F401
+from repro.core.sketch import (  # noqa: F401
+    SketchParams,
+    SketchSpec,
+    SketchState,
+    build_sketch,
+    cell_std,
+    count_min_spec,
+    equal_sketch_spec,
+    init_state,
+    merge,
+    mod_sketch_spec,
+    query,
+    query_jit,
+    update,
+    update_jit,
+)
+from repro.core.range_opt import optimal_ranges_mod2, recursive_ranges, split_range  # noqa: F401
+from repro.core.selection import choose_sketch  # noqa: F401
+from repro.core.greedy import greedy_config  # noqa: F401
+from repro.core.partition import all_partitions, bell_number  # noqa: F401

@@ -1,0 +1,72 @@
+"""Signed Count-Sketch variant of the composite-hash core (beyond paper).
+
+Same partitioned indexing machinery as core/sketch.py, plus a +-1 sign hash
+per (row, item).  Unbiased (median) estimates make this the right primitive
+for *gradient* frequency/heavy-hitter sketching, where values are real and
+cancellation matters -- used by training/grad_compression.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.hashing import addmod_p31, draw_hash_params, mulmod_p31_16
+
+
+class CountSketchParams(NamedTuple):
+    base: sk.SketchParams
+    sign_q: jax.Array  # uint32[w, total_chunks]
+    sign_r: jax.Array  # uint32[w]
+
+
+class CountSketchState(NamedTuple):
+    params: CountSketchParams
+    table: jax.Array  # float32[w, h]
+
+
+def init_state(spec: sk.SketchSpec, key: jax.Array, dtype=jnp.float32) -> CountSketchState:
+    kb, kq, kr = jax.random.split(key, 3)
+    base = sk.init_params(spec, kb)
+    sign_q = draw_hash_params(kq, (spec.width, spec.schema.total_chunks))
+    sign_r = draw_hash_params(kr, (spec.width,))
+    table = jnp.zeros((spec.width, spec.table_size), dtype=dtype)
+    return CountSketchState(CountSketchParams(base, sign_q, sign_r), table)
+
+
+def _signs(spec: sk.SketchSpec, params: CountSketchParams, items: jax.Array) -> jax.Array:
+    """+-1 per (row, item): independent CW hash over the full chunk vector."""
+    chunks = spec.schema.module_chunks(items)  # [B, C]
+    w = spec.width
+    acc = jnp.broadcast_to(params.sign_r[:, None], (w, chunks.shape[0])).astype(jnp.uint32)
+    for c in range(chunks.shape[1]):
+        acc = addmod_p31(acc, mulmod_p31_16(params.sign_q[:, c][:, None], chunks[None, :, c]))
+    return jnp.where((acc & jnp.uint32(1)) == 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def update(spec: sk.SketchSpec, state: CountSketchState, items: jax.Array,
+           values: jax.Array) -> CountSketchState:
+    idx = sk.compute_indices(spec, state.params.base, items)       # [w, B]
+    s = _signs(spec, state.params, items)                          # [w, B]
+    w, h = state.table.shape
+    flat = (jnp.arange(w, dtype=jnp.uint32)[:, None] * jnp.uint32(h) + idx).reshape(-1)
+    contrib = (s * values[None, :].astype(jnp.float32)).reshape(-1)
+    table = state.table.reshape(-1).at[flat].add(contrib.astype(state.table.dtype)).reshape(w, h)
+    return CountSketchState(state.params, table)
+
+
+def query(spec: sk.SketchSpec, state: CountSketchState, items: jax.Array) -> jax.Array:
+    """Unbiased median-of-rows estimate of each item's summed value."""
+    return query_rows(spec, state, items)[1]
+
+
+def query_rows(spec: sk.SketchSpec, state: CountSketchState,
+               items: jax.Array):
+    """(per-row estimates [w, Q], median [Q]) -- rows enable robustness
+    filters (e.g. sign agreement) on top of the median."""
+    idx = sk.compute_indices(spec, state.params.base, items)
+    s = _signs(spec, state.params, items)
+    vals = jnp.take_along_axis(state.table, idx.astype(jnp.int32), axis=1) * s
+    return vals, jnp.median(vals, axis=0)

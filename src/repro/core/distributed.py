@@ -1,0 +1,159 @@
+"""Distributed sketch runtime (shard_map + psum).
+
+The sketch table is *linear* in the stream, so the cluster-scale pattern is:
+
+  1. shard the incoming stream over the data-parallel mesh axes,
+  2. every device folds its shard into a device-local table (Pallas kernel
+     or jnp scatter -- contention-free either way),
+  3. merge by ``psum`` over the DP axes at sync points (exact by linearity).
+
+Queries run anywhere once merged; for row-sharded tables (w split over the
+"model" axis) a ``pmin`` over row-groups completes the Count-Min min.
+
+These helpers are mesh-generic: they work on the production (16,16) /
+(2,16,16) meshes in the dry-run and on small host-platform meshes in tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import sketch as sk
+
+
+def sharded_build(
+    spec: sk.SketchSpec,
+    params: sk.SketchParams,
+    mesh: Mesh,
+    data_axes: Tuple[str, ...],
+    items: jax.Array,
+    freqs: jax.Array,
+    table_dtype=jnp.int32,
+) -> jax.Array:
+    """Build the *merged* table from a stream sharded over ``data_axes``.
+
+    items: uint32[B, n] with B divisible by the product of data-axis sizes.
+    Returns the replicated merged table [w, h].
+    """
+
+    def local_fold(items_l, freqs_l):
+        state = sk.SketchState(
+            params=params,
+            table=jnp.zeros((spec.width, spec.table_size), dtype=table_dtype),
+        )
+        state = sk.update(spec, state, items_l, freqs_l)
+        return jax.lax.psum(state.table, data_axes)
+
+    fn = jax.shard_map(
+        local_fold,
+        mesh=mesh,
+        in_specs=(P(data_axes), P(data_axes)),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(items, freqs)
+
+
+def sharded_update(
+    spec: sk.SketchSpec,
+    mesh: Mesh,
+    data_axes: Tuple[str, ...],
+    state: sk.SketchState,
+    items: jax.Array,
+    freqs: jax.Array,
+) -> sk.SketchState:
+    """One synchronous distributed update step: local fold + psum merge."""
+    delta = sharded_build(spec, state.params, mesh, data_axes, items, freqs,
+                          table_dtype=state.table.dtype)
+    return sk.SketchState(params=state.params, table=state.table + delta)
+
+
+def lazy_local_update(
+    spec: sk.SketchSpec,
+    mesh: Mesh,
+    data_axes: Tuple[str, ...],
+    local_tables: jax.Array,  # [w, h] per device, sharded "stacked" on axis 0
+    params: sk.SketchParams,
+    items: jax.Array,
+    freqs: jax.Array,
+) -> jax.Array:
+    """Asynchronous variant: devices accumulate local tables; no collective.
+
+    ``local_tables`` has a leading device axis sharded over ``data_axes``;
+    call :func:`merge_local_tables` at sync intervals.  This is the
+    overlap-friendly mode used by the training integration (the merge
+    all-reduce is amortized over many steps and can overlap compute).
+    """
+
+    def fold(tbl_l, items_l, freqs_l):
+        st = sk.SketchState(params=params, table=tbl_l[0])
+        st = sk.update(spec, st, items_l, freqs_l)
+        return st.table[None]
+
+    fn = jax.shard_map(
+        fold,
+        mesh=mesh,
+        in_specs=(P(data_axes), P(data_axes), P(data_axes)),
+        out_specs=P(data_axes),
+        check_vma=False,
+    )
+    return fn(local_tables, items, freqs)
+
+
+def merge_local_tables(
+    mesh: Mesh, data_axes: Tuple[str, ...], local_tables: jax.Array
+) -> jax.Array:
+    """psum-merge the lazily accumulated per-device tables."""
+
+    def m(tbl_l):
+        return jax.lax.psum(tbl_l[0], data_axes)[None]
+
+    fn = jax.shard_map(
+        m, mesh=mesh, in_specs=(P(data_axes),), out_specs=P(data_axes),
+        check_vma=False,
+    )
+    merged = fn(local_tables)
+    # every shard now holds the global table; take shard 0's copy
+    return merged[0]
+
+
+def row_sharded_query(
+    spec: sk.SketchSpec,
+    mesh: Mesh,
+    model_axis: str,
+    params: sk.SketchParams,
+    table: jax.Array,     # [w, h] sharded on rows over model_axis
+    items: jax.Array,     # replicated queries
+) -> jax.Array:
+    """Count-Min query with the w rows sharded over the model axis.
+
+    Each shard takes the min over its local rows, then a pmin over the axis
+    completes the global min.  w must be divisible by the axis size.
+    """
+
+    def q(params_l, table_l, items_l):
+        w_local = table_l.shape[0]
+        # local min over this shard's rows: reuse compute_indices on a
+        # width-w_local view of the spec with this shard's params
+        sub_spec = sk.SketchSpec(spec.schema, spec.partition, spec.ranges, w_local)
+        idx = sk.compute_indices(sub_spec, params_l, items_l)
+        vals = jnp.take_along_axis(table_l, idx.astype(jnp.int32), axis=1)
+        return jax.lax.pmin(jnp.min(vals, axis=0), model_axis)
+
+    fn = jax.shard_map(
+        q,
+        mesh=mesh,
+        in_specs=(
+            sk.SketchParams(q=P(model_axis), r=P(model_axis)),
+            P(model_axis),
+            P(),
+        ),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(params, table, items)

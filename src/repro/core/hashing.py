@@ -1,0 +1,186 @@
+"""Pairwise-independent modular hashing (paper Eq. 1, generalized).
+
+The paper uses ``H(i) = ((q*i + r) mod P) mod range`` with ``P`` a prime larger
+than any key.  Packed modular keys can exceed 61 bits (e.g. modularity-8 IPv4
+keys pack to 64 bits), and TPU Pallas has no 64-bit integer lanes, so we use
+the standard Carter-Wegman *vector* generalization of the same family:
+
+    H(x) = ((r + sum_c q_c * x_c) mod P) mod range,     P = 2^31 - 1
+
+where ``x_c`` are the 16-bit chunks of the (domain-aware) packed key and
+``q_c, r`` are uniform in ``[0, P)``.  This family is strongly universal
+(pairwise independent) over distinct chunk vectors, hence over distinct keys,
+and degenerates to Eq. 1 exactly for keys smaller than 2^16.  All collision
+bounds used by the paper (Thms 1-3) only need pairwise independence, so the
+guarantees carry over unchanged.
+
+Everything here is exact uint32 limb arithmetic:
+
+  * products are split so every partial product fits in 32 bits,
+  * ``mod P`` uses the Mersenne reduction ``x mod (2^31-1) = (x >> 31) + (x & P)``.
+
+The same functions run under ``jit``, inside Pallas kernel bodies, and on CPU,
+bit-identical to the uint64 numpy oracle (`cw_hash_np`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+P31 = np.uint32((1 << 31) - 1)  # Mersenne prime 2^31 - 1
+_MASK16 = np.uint32(0xFFFF)
+_MASK15 = np.uint32(0x7FFF)
+
+
+# --------------------------------------------------------------------------
+# uint32 limb arithmetic (jnp; also valid inside Pallas kernel bodies)
+# --------------------------------------------------------------------------
+
+def mod_p31(x: jax.Array) -> jax.Array:
+    """x (uint32, any value) mod P31, result in [0, P31)."""
+    x = x.astype(jnp.uint32)
+    s = (x >> jnp.uint32(31)) + (x & P31)
+    # s < 2^31 + 1, so at most one conditional subtract; P31 itself maps to 0.
+    return jnp.where(s >= P31, s - P31, s)
+
+
+def mulmod_p31_16(a: jax.Array, x: jax.Array) -> jax.Array:
+    """(a * x) mod P31 for a < P31 (31 bits) and x < 2^16, exact in uint32.
+
+    Split ``a = a1*2^16 + a0`` so both partial products fit 32 bits:
+      a0*x < 2^32 (exact uint32 product), a1*x < 2^31.
+    Then reduce ``a1*x*2^16`` with the Mersenne shift identity.
+    """
+    a = a.astype(jnp.uint32)
+    x = x.astype(jnp.uint32)
+    a0 = a & _MASK16
+    a1 = a >> jnp.uint32(16)          # < 2^15
+    p0 = a0 * x                        # < 2^32, exact
+    p1 = a1 * x                        # < 2^31, exact
+    # (p1 << 16) mod P31: low 31 bits come from the low 15 bits of p1;
+    # the high part is p1 >> 15 (since 2^31 = 1 mod P31).
+    lo = (p1 & _MASK15) << jnp.uint32(16)   # < 2^31
+    hi = p1 >> jnp.uint32(15)               # < 2^16
+    t1 = mod_p31(lo + hi)
+    t0 = mod_p31(p0)
+    s = t1 + t0                              # < 2*P31 < 2^32
+    return jnp.where(s >= P31, s - P31, s)
+
+
+def addmod_p31(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(a + b) mod P31 for a, b < P31."""
+    s = a.astype(jnp.uint32) + b.astype(jnp.uint32)
+    return jnp.where(s >= P31, s - P31, s)
+
+
+def cw_hash(chunks: jax.Array, q: jax.Array, r: jax.Array) -> jax.Array:
+    """Carter-Wegman vector hash, uint32 limbs.
+
+    chunks: uint32[..., C] with each value < 2^16
+    q:      uint32[C]       multipliers  < P31
+    r:      uint32[]        offset       < P31
+    returns uint32[...] in [0, P31)
+    """
+    acc = jnp.broadcast_to(r.astype(jnp.uint32), chunks.shape[:-1])
+    for c in range(chunks.shape[-1]):
+        acc = addmod_p31(acc, mulmod_p31_16(q[c], chunks[..., c]))
+    return acc
+
+
+# --------------------------------------------------------------------------
+# numpy uint64 oracle (host side / tests)
+# --------------------------------------------------------------------------
+
+def cw_hash_np(chunks: np.ndarray, q: np.ndarray, r: int | np.ndarray) -> np.ndarray:
+    """Oracle: same hash with plain uint64 arithmetic.
+
+    q*x < 2^31 * 2^16 = 2^47 per term; <= 64 chunk terms keeps the sum < 2^53,
+    far below uint64 overflow, so a single final ``% P`` suffices.
+    """
+    chunks = chunks.astype(np.uint64)
+    q = q.astype(np.uint64)
+    acc = np.full(chunks.shape[:-1], np.uint64(r), dtype=np.uint64)
+    for c in range(chunks.shape[-1]):
+        acc = acc + q[c] * chunks[..., c]
+    return (acc % np.uint64(P31)).astype(np.uint32)
+
+
+# --------------------------------------------------------------------------
+# Key schema: module domains -> 16-bit chunk layout
+# --------------------------------------------------------------------------
+
+def _chunks_for_domain(domain: int) -> int:
+    """Number of 16-bit chunks needed for values in [0, domain)."""
+    if domain < 2:
+        return 1
+    bits = int(domain - 1).bit_length()
+    return (bits + 15) // 16
+
+
+@dataclasses.dataclass(frozen=True)
+class KeySchema:
+    """Domains of the ordered modules of an item key (paper SIII).
+
+    ``domains[i]`` is the size of module i's value set; module values are
+    uint32 in ``[0, domains[i])``.  Packing a *group* of modules is the
+    concatenation of each member's fixed-width 16-bit digit vector, which is
+    injective given the fixed domains -- the paper's "consider the domains of
+    the modules before concatenating them" (SIII-B), in digit form.
+    """
+    domains: Tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.domains:
+            raise ValueError("KeySchema needs at least one module")
+        for d in self.domains:
+            if not (2 <= d <= 1 << 32):
+                raise ValueError(f"module domain {d} out of [2, 2^32]")
+
+    @property
+    def modularity(self) -> int:
+        return len(self.domains)
+
+    @property
+    def chunk_counts(self) -> Tuple[int, ...]:
+        return tuple(_chunks_for_domain(d) for d in self.domains)
+
+    def module_chunks_np(self, items: np.ndarray) -> np.ndarray:
+        """uint32[N, n_modules] -> uint32[N, total_chunks] of 16-bit digits."""
+        cols = []
+        for m, nc in enumerate(self.chunk_counts):
+            v = items[..., m].astype(np.uint64)
+            for c in range(nc):
+                cols.append(((v >> np.uint64(16 * c)) & np.uint64(0xFFFF)).astype(np.uint32))
+        return np.stack(cols, axis=-1)
+
+    def module_chunks(self, items: jax.Array) -> jax.Array:
+        """jnp version of :meth:`module_chunks_np` (uint32 in, uint32 out)."""
+        cols = []
+        for m, nc in enumerate(self.chunk_counts):
+            v = items[..., m].astype(jnp.uint32)
+            for c in range(nc):
+                cols.append((v >> jnp.uint32(16 * c)) & jnp.uint32(0xFFFF))
+        return jnp.stack(cols, axis=-1)
+
+    def chunk_slice(self, module: int) -> Tuple[int, int]:
+        """(start, stop) of module's chunks in the full chunk vector."""
+        start = sum(self.chunk_counts[:module])
+        return start, start + self.chunk_counts[module]
+
+    @property
+    def total_chunks(self) -> int:
+        return sum(self.chunk_counts)
+
+
+def draw_hash_params(key: jax.Array, shape: Sequence[int]) -> jax.Array:
+    """Uniform multipliers/offsets in [0, P31), uint32."""
+    v = jax.random.randint(key, tuple(shape), 0, int(P31), dtype=jnp.int32)
+    return v.astype(jnp.uint32)
+
+
+def draw_hash_params_np(rng: np.random.Generator, shape: Sequence[int]) -> np.ndarray:
+    return rng.integers(0, int(P31), size=tuple(shape), dtype=np.int64).astype(np.uint32)

@@ -1,0 +1,71 @@
+"""Sketch selection by cell-value standard deviation (paper Thm 4/5, SIV-B).
+
+Between two equal-size sketches built over the *same uniform sample*, the one
+with smaller cell-value standard deviation yields smaller estimation error
+with high probability (Cantelli).  Thm 5 shows the sample decision transfers
+to the full stream since (sigma^p)^2 = p * sigma^2 under uniform sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.core.hashing import KeySchema
+from repro.core.range_opt import Aggregate, optimal_ranges_mod2
+
+
+def sample_cell_std(
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    items: np.ndarray,
+    freqs: np.ndarray,
+) -> float:
+    """Build ``spec`` over the sample and return the cell std statistic."""
+    state = sk.build_sketch(spec, key, items, freqs)
+    return float(sk.cell_std(state.table))
+
+
+@dataclasses.dataclass
+class SelectionResult:
+    choice: str                       # 'count-min' | 'mod-sketch'
+    spec: sk.SketchSpec
+    sigma: Dict[str, float]
+    mod_ranges: Tuple[int, ...]
+
+
+def choose_sketch(
+    items: np.ndarray,
+    freqs: np.ndarray,
+    schema: KeySchema,
+    h: int,
+    w: int,
+    key: jax.Array,
+    agg: Aggregate = "median",
+    candidates: Optional[Dict[str, sk.SketchSpec]] = None,
+) -> SelectionResult:
+    """Paper SIV summary steps (1)-(3) for modularity-2 keys.
+
+    (1) the caller supplies the uniform sample; (2) find optimal MOD ranges
+    (a, b) via Thm 3; (3) store the sample in both Count-Min and MOD-Sketch
+    and keep the one with smaller cell std.  ``candidates`` may override /
+    extend the compared specs (used by Algorithm 1, which reuses this
+    criterion to score greedy choices).
+    """
+    if candidates is None:
+        a, b = optimal_ranges_mod2(items, freqs, h, agg)
+        candidates = {
+            "count-min": sk.count_min_spec(schema, h, w),
+            "mod-sketch": sk.mod_sketch_spec(schema, [(0,), (1,)], (a, b), w),
+        }
+    sigma: Dict[str, float] = {}
+    for i, (name, spec) in enumerate(candidates.items()):
+        sigma[name] = sample_cell_std(spec, jax.random.fold_in(key, i), items, freqs)
+    choice = min(sigma, key=sigma.get)
+    spec = candidates[choice]
+    mod_ranges = candidates.get("mod-sketch", spec).ranges
+    return SelectionResult(choice=choice, spec=spec, sigma=sigma, mod_ranges=mod_ranges)

@@ -1,0 +1,339 @@
+"""Unified composite-hash sketch family (paper SIII).
+
+Every sketch studied in the paper is one point of a single family::
+
+    SketchSpec = (partition G = {g_1..g_m} of modules, ranges r_1..r_m, width w)
+    row index  = sum_j  H_{k,j}(pack(key[g_j])) * stride_j     (mixed radix)
+
+  * Count-Min    : G = {{0..n-1}},        r_1 = h
+  * Equal-Sketch : G = {{0},..,{n-1}},    r_j = h^(1/n)
+  * MOD-Sketch   : data-dependent G and r (Thm 3 / Algorithm 1)
+
+Update adds +f to one cell per row; query takes the min over rows.  The table
+is linear in the stream, hence sketches merge by cell-wise addition -- the
+basis of the distributed runtime (core/distributed.py) and of the Pallas
+one-hot-matmul update kernel (kernels/).
+
+This module is the *reference* JAX implementation (jnp scatter/gather).  The
+performance path lives in kernels/ops.py and is verified against this one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import (
+    P31,
+    KeySchema,
+    cw_hash,
+    cw_hash_np,
+    draw_hash_params,
+)
+
+
+# --------------------------------------------------------------------------
+# Spec
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SketchSpec:
+    """Static description of a composite-hash sketch."""
+    schema: KeySchema
+    partition: Tuple[Tuple[int, ...], ...]  # ordered groups of module indices
+    ranges: Tuple[int, ...]                 # hash range per group
+    width: int                              # w rows
+
+    def __post_init__(self):
+        n = self.schema.modularity
+        seen = sorted(i for g in self.partition for i in g)
+        if seen != list(range(n)):
+            raise ValueError(f"partition {self.partition} does not cover 0..{n-1}")
+        if len(self.ranges) != len(self.partition):
+            raise ValueError("one range per group required")
+        for r in self.ranges:
+            if r < 1:
+                raise ValueError(f"range {r} < 1")
+        if self.width < 1:
+            raise ValueError("width >= 1 required")
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.partition)
+
+    @property
+    def table_size(self) -> int:
+        """Cells per row: h = prod(ranges)."""
+        return int(np.prod([int(r) for r in self.ranges], dtype=np.int64))
+
+    @property
+    def strides(self) -> Tuple[int, ...]:
+        s, out = 1, []
+        for r in reversed(self.ranges):
+            out.append(s)
+            s *= int(r)
+        return tuple(reversed(out))
+
+    def group_chunk_columns(self, j: int) -> Tuple[int, ...]:
+        """Columns of the full chunk matrix belonging to group j (ordered)."""
+        cols = []
+        for mod in self.partition[j]:
+            a, b = self.schema.chunk_slice(mod)
+            cols.extend(range(a, b))
+        return tuple(cols)
+
+    def describe(self) -> str:
+        gs = ",".join("{" + "+".join(str(m) for m in g) + "}" for g in self.partition)
+        rs = "x".join(str(r) for r in self.ranges)
+        return f"[{gs}] ranges={rs} (h={self.table_size}) w={self.width}"
+
+
+def count_min_spec(schema: KeySchema, h: int, w: int) -> SketchSpec:
+    """Paper baseline (1): concatenate all modules, one hash of range h."""
+    return SketchSpec(schema, (tuple(range(schema.modularity)),), (int(h),), w)
+
+
+def equal_ranges(h: int, n: int) -> Tuple[int, ...]:
+    """n integer ranges ~ h^(1/n) whose product is as close to h as possible."""
+    base = max(2, int(round(h ** (1.0 / n))))
+    ranges = [base] * n
+    # Nudge the last range so the product tracks h (paper's own integer
+    # examples are approximate too, e.g. 848*424 vs h=360000).
+    prod_rest = int(np.prod(ranges[:-1], dtype=np.int64)) if n > 1 else 1
+    ranges[-1] = max(2, int(round(h / prod_rest)))
+    return tuple(ranges)
+
+
+def equal_sketch_spec(schema: KeySchema, h: int, w: int) -> SketchSpec:
+    """Paper baseline (2) (= TCM / gMatrix / reversible-sketch style)."""
+    n = schema.modularity
+    return SketchSpec(schema, tuple((i,) for i in range(n)), equal_ranges(h, n), w)
+
+
+def mod_sketch_spec(
+    schema: KeySchema,
+    partition: Sequence[Sequence[int]],
+    ranges: Sequence[int],
+    w: int,
+) -> SketchSpec:
+    return SketchSpec(
+        schema,
+        tuple(tuple(int(m) for m in g) for g in partition),
+        tuple(int(r) for r in ranges),
+        w,
+    )
+
+
+# --------------------------------------------------------------------------
+# Params & state
+# --------------------------------------------------------------------------
+
+class SketchParams(NamedTuple):
+    """Hash parameters: one CW vector hash per (row, group)."""
+    q: jax.Array  # uint32[w, total_chunks]
+    r: jax.Array  # uint32[w, n_groups]
+
+
+class SketchState(NamedTuple):
+    params: SketchParams
+    table: jax.Array  # [w, h]
+
+
+def init_params(spec: SketchSpec, key: jax.Array) -> SketchParams:
+    kq, kr = jax.random.split(key)
+    q = draw_hash_params(kq, (spec.width, spec.schema.total_chunks))
+    r = draw_hash_params(kr, (spec.width, spec.n_groups))
+    return SketchParams(q=q, r=r)
+
+
+def init_state(spec: SketchSpec, key: jax.Array, dtype=jnp.int32) -> SketchState:
+    params = init_params(spec, key)
+    table = jnp.zeros((spec.width, spec.table_size), dtype=dtype)
+    return SketchState(params=params, table=table)
+
+
+# --------------------------------------------------------------------------
+# Indexing / update / query
+# --------------------------------------------------------------------------
+
+def compute_indices(spec: SketchSpec, params: SketchParams, items: jax.Array) -> jax.Array:
+    """Cell index per (row, item): uint32[w, B].
+
+    items: uint32[B, n_modules].
+    """
+    chunks = spec.schema.module_chunks(items)  # [B, C]
+    w = spec.width
+    idx = jnp.zeros((w, chunks.shape[0]), dtype=jnp.uint32)
+    for j, (rng_j, stride_j) in enumerate(zip(spec.ranges, spec.strides)):
+        cols = spec.group_chunk_columns(j)
+        gchunks = chunks[:, list(cols)]                       # [B, Cj]
+        # vector hash per row k: fold over the group's chunks
+        acc = jnp.broadcast_to(params.r[:, j][:, None], (w, chunks.shape[0]))
+        acc = acc.astype(jnp.uint32)
+        for ci, c in enumerate(cols):
+            from repro.core.hashing import addmod_p31, mulmod_p31_16
+            acc = addmod_p31(acc, mulmod_p31_16(params.q[:, c][:, None], gchunks[None, :, ci]))
+        hj = acc % jnp.uint32(rng_j)
+        idx = idx + hj * jnp.uint32(stride_j)
+    return idx
+
+
+def compute_indices_np(spec: SketchSpec, params: SketchParams, items: np.ndarray) -> np.ndarray:
+    """Host oracle for compute_indices (uint64 arithmetic)."""
+    chunks = spec.schema.module_chunks_np(np.asarray(items))
+    q = np.asarray(params.q)
+    r = np.asarray(params.r)
+    w = spec.width
+    idx = np.zeros((w, chunks.shape[0]), dtype=np.uint64)
+    for j, (rng_j, stride_j) in enumerate(zip(spec.ranges, spec.strides)):
+        cols = list(spec.group_chunk_columns(j))
+        for k in range(w):
+            hk = cw_hash_np(chunks[:, cols], q[k, cols], int(r[k, j]))
+            idx[k] += (hk.astype(np.uint64) % np.uint64(rng_j)) * np.uint64(stride_j)
+    return idx.astype(np.uint32)
+
+
+def update(
+    spec: SketchSpec,
+    state: SketchState,
+    items: jax.Array,
+    freqs: jax.Array,
+) -> SketchState:
+    """Fold a block of (item, freq) pairs into the sketch (order-free)."""
+    idx = compute_indices(spec, state.params, items)          # [w, B]
+    w, h = state.table.shape
+    flat = (jnp.arange(w, dtype=jnp.uint32)[:, None] * jnp.uint32(h) + idx).reshape(-1)
+    f = jnp.broadcast_to(freqs.astype(state.table.dtype), (w, freqs.shape[0])).reshape(-1)
+    table = state.table.reshape(-1).at[flat].add(f).reshape(w, h)
+    return SketchState(params=state.params, table=table)
+
+
+def query(spec: SketchSpec, state: SketchState, items: jax.Array) -> jax.Array:
+    """Count-Min style point query: min over rows (overestimate)."""
+    idx = compute_indices(spec, state.params, items)          # [w, B]
+    vals = jnp.take_along_axis(state.table, idx.astype(jnp.int32), axis=1)
+    return jnp.min(vals, axis=0)
+
+
+def update_conservative(
+    spec: SketchSpec,
+    state: SketchState,
+    items: jax.Array,
+    freqs: jax.Array,
+) -> SketchState:
+    """Conservative update (beyond-paper accuracy option; breaks linearity).
+
+    Sequential over the block via fori_loop: cell_k <- max(cell_k, est + f).
+    Not mergeable across shards -- excluded from the distributed runtime.
+    """
+    idx = compute_indices(spec, state.params, items)          # [w, B]
+    w, h = state.table.shape
+
+    def body(b, table):
+        cells = idx[:, b].astype(jnp.int32)
+        cur = table[jnp.arange(w), cells]
+        est = jnp.min(cur) + freqs[b].astype(table.dtype)
+        new = jnp.maximum(cur, est)
+        return table.at[jnp.arange(w), cells].set(new)
+
+    table = jax.lax.fori_loop(0, items.shape[0], body, state.table)
+    return SketchState(params=state.params, table=table)
+
+
+def merge(a: SketchState, b: SketchState) -> SketchState:
+    """Cell-wise merge: sketch(A + B) == merge(sketch(A), sketch(B)) exactly."""
+    return SketchState(params=a.params, table=a.table + b.table)
+
+
+def query_marginal(spec: SketchSpec, state: SketchState, group: int,
+                   values: jax.Array) -> jax.Array:
+    """Subspace query: estimate O(*,..,value,..,*) -- the total frequency of
+    all items whose ``group`` equals ``value`` (e.g. a node's out-degree mass
+    for an edge stream).
+
+    This is the structural capability composite hashing buys over Count-Min
+    (the gMatrix/TCM motivation the paper cites): the group's sub-index is a
+    separate factor of the cell address, so the marginal is the sum of the
+    ``h / range_j`` cells sharing that sub-index, min'd over rows.  Count-Min
+    would have to enumerate every key.  ``values``: uint32[Q, len(group
+    modules)] module values for the queried group.
+    """
+    chunks_full = jnp.zeros((values.shape[0], spec.schema.total_chunks),
+                            jnp.uint32)
+    cols = spec.group_chunk_columns(group)
+    # chunk the queried group's modules into their columns
+    vcols = []
+    for mi, mod in enumerate(spec.partition[group]):
+        nc = spec.schema.chunk_counts[mod]
+        v = values[..., mi].astype(jnp.uint32)
+        for c in range(nc):
+            vcols.append((v >> jnp.uint32(16 * c)) & jnp.uint32(0xFFFF))
+    gchunks = jnp.stack(vcols, axis=-1)                       # [Q, Cg]
+
+    w = spec.width
+    from repro.core.hashing import addmod_p31, mulmod_p31_16
+    acc = jnp.broadcast_to(state.params.r[:, group][:, None],
+                           (w, values.shape[0])).astype(jnp.uint32)
+    for ci, c in enumerate(cols):
+        acc = addmod_p31(acc, mulmod_p31_16(state.params.q[:, c][:, None],
+                                            gchunks[None, :, ci]))
+    sub_idx = (acc % jnp.uint32(spec.ranges[group])).astype(jnp.int32)  # [w,Q]
+
+    # sum the cells sharing this sub-index: reshape the row into the mixed-
+    # radix grid, reduce every axis except this group's
+    grid = state.table.reshape((w,) + tuple(spec.ranges))
+    axes = tuple(1 + j for j in range(spec.n_groups) if j != group)
+    per_value = jnp.sum(grid, axis=axes) if axes else grid     # [w, range_g]
+    vals = jnp.take_along_axis(per_value, sub_idx, axis=1)     # [w, Q]
+    return jnp.min(vals, axis=0)
+
+
+def cell_std(table: jax.Array) -> jax.Array:
+    """Std-dev of all cell values -- the Thm 4/5 selection statistic."""
+    return jnp.std(table.astype(jnp.float64 if table.dtype == jnp.int64 else jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Convenience jit'd entry points (static spec)
+# --------------------------------------------------------------------------
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def update_jit(spec: SketchSpec, state: SketchState, items, freqs) -> SketchState:
+    return update(spec, state, items, freqs)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def query_jit(spec: SketchSpec, state: SketchState, items) -> jax.Array:
+    return query(spec, state, items)
+
+
+def build_sketch(
+    spec: SketchSpec,
+    key: jax.Array,
+    items: np.ndarray | jax.Array,
+    freqs: np.ndarray | jax.Array,
+    block: int = 1 << 18,
+    dtype=jnp.int32,
+) -> SketchState:
+    """Build a sketch over a (possibly large) weighted stream, in blocks."""
+    state = init_state(spec, key, dtype=dtype)
+    n = int(np.asarray(items).shape[0])
+    items = np.asarray(items, dtype=np.uint32)
+    freqs = np.asarray(freqs)
+    for s in range(0, n, block):
+        e = min(n, s + block)
+        blk_items = items[s:e]
+        blk_freqs = freqs[s:e]
+        if e - s < block and n > block:
+            pad = block - (e - s)
+            blk_items = np.pad(blk_items, ((0, pad), (0, 0)))
+            blk_freqs = np.pad(blk_freqs, (0, pad))
+        state = update_jit(spec, state, jnp.asarray(blk_items), jnp.asarray(blk_freqs))
+    return state

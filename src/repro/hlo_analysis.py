@@ -1,0 +1,367 @@
+"""Loop-aware cost analysis of optimized HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+so any scanned layer stack (our models scan over blocks, SSD chunks,
+attention q-chunks) under-reports FLOPs/bytes/collectives by the trip
+count.  This module re-derives the three roofline inputs from the
+*post-partitioning* HLO text with loops multiplied out:
+
+  * symbol table per computation (shapes of every instruction),
+  * dot FLOPs = 2 x |result| x |contracting dims| (batch dims included in
+    the result), elementwise/reduce ops counted at 1 FLOP/elem,
+  * bytes = operands + result for top-level ops; fusions count their
+    boundary (operands/result) for bytes but their interior for FLOPs --
+    matching the HBM-traffic meaning of the memory roofline term,
+  * while trip counts from ``known_trip_count`` backend configs when
+    present, else the loop-bound constant in the condition computation,
+  * collectives scaled by the enclosing loops' trip product, with ring
+    wire-byte factors per op (see repro.roofline).
+
+Everything is per-partition (the compiled module is the local SPMD
+program), so terms divide by per-chip peaks directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# result is either a tuple "( ... )" (may contain /*index=k*/ comments but no
+# nested parens) or a single token like "bf16[16,4096]{1,0}"
+_OPCODE = re.compile(r"^(\(.*?\)|\S+)\s+([a-z][a-z0-9\-]*)\(")
+_TRIP_BC = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "floor", "ceil", "round-nearest-afz", "logistic", "cosine", "sine",
+    "expm1", "log1p", "atan2", "remainder", "select", "compare", "and",
+    "or", "xor", "not", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "clamp", "convert",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str
+    opcode: str
+    operands: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr]
+    order: List[str]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost") -> "Cost":
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.coll_wire_bytes += o.coll_wire_bytes
+        for k, v in o.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v
+        for k, v in o.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0) + v
+        for k, v in o.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0) + v
+        return self
+
+    def scaled(self, t: float) -> "Cost":
+        return Cost(
+            flops=self.flops * t,
+            bytes=self.bytes * t,
+            coll_wire_bytes=self.coll_wire_bytes * t,
+            coll_counts={k: v * t for k, v in self.coll_counts.items()},
+            coll_bytes={k: v * t for k, v in self.coll_bytes.items()},
+            bytes_by_op={k: v * t for k, v in self.bytes_by_op.items()},
+        )
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if (not line[:1].isspace() and line.rstrip().endswith("{")
+                and (line.startswith("%") or line.startswith("ENTRY"))):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(name=m.group(1), instrs={}, order=[])
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        mo = _OPCODE.match(rhs)
+        if not mo:
+            continue
+        shape_str, opcode = mo.group(1), mo.group(2)
+        # operand names: %refs inside the first (...) group
+        args_m = re.search(re.escape(opcode) + r"\(([^)]*)\)", rhs)
+        operands = re.findall(r"%([\w.\-]+)", args_m.group(1)) if args_m else []
+        cur.instrs[name] = Instr(name=name, shape_str=shape_str, opcode=opcode,
+                                 operands=operands, raw=rhs)
+        cur.order.append(name)
+    return comps, entry
+
+
+def _group_size(raw: str) -> int:
+    m = _GROUPS_RE.search(raw)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_ARR_RE.search(raw)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _trip_count(comps: Dict[str, Computation], instr: Instr) -> float:
+    m = _TRIP_BC.search(instr.raw)
+    if m:
+        return float(m.group(1))
+    mc = _COND.search(instr.raw)
+    if mc and mc.group(1) in comps:
+        consts = [int(x) for x in _CONST_INT.findall(
+            "\n".join(i.raw for i in comps[mc.group(1)].instrs.values()))]
+        if consts:
+            return float(max(consts))
+    return 1.0
+
+
+def _dot_flops(comp: Computation, instr: Instr) -> float:
+    res_elems, _ = _shape_elems_bytes(instr.shape_str)
+    contract = 1
+    mc = _CONTRACT.search(instr.raw)
+    if mc and instr.operands:
+        lhs = comp.instrs.get(instr.operands[0])
+        if lhs is not None:
+            dims_s = _SHAPE.search(lhs.shape_str)
+            if dims_s:
+                dims = [int(d) for d in dims_s.group(2).split(",") if d]
+                for ci in mc.group(1).split(","):
+                    if ci:
+                        idx = int(ci)
+                        if idx < len(dims):
+                            contract *= dims[idx]
+    return 2.0 * res_elems * contract
+
+
+_PARAM_IDX = re.compile(r"parameter\((\d+)\)")
+_SLICE_READERS = {"dynamic-slice", "gather", "slice"}
+
+
+def _fusion_boundary_bytes(comps: Dict[str, Computation], callee: str,
+                           call_ins: Instr, caller: Computation) -> float:
+    """HBM traffic across a fusion boundary, use-aware.
+
+    A parameter whose only internal uses are (dynamic-)slice/gather reads
+    contributes the sliced bytes, not the full buffer (the canonical case:
+    the loop-carried residual stack read one layer per iteration).  A root
+    that is a dynamic-update-slice writes only the update.
+    """
+    comp = comps.get(callee)
+    if comp is None:
+        return 0.0
+    # caller-side operand sizes by parameter index
+    opnd_sizes: List[float] = []
+    for o in call_ins.operands:
+        if o in caller.instrs:
+            opnd_sizes.append(_shape_elems_bytes(caller.instrs[o].shape_str)[1])
+        else:
+            opnd_sizes.append(0.0)
+    total = 0.0
+    root_name = comp.order[-1] if comp.order else None
+    for iname in comp.order:
+        ins = comp.instrs[iname]
+        if ins.opcode != "parameter":
+            continue
+        midx = _PARAM_IDX.search(ins.raw)
+        pidx = int(midx.group(1)) if midx else -1
+        uses = [comp.instrs[u] for u in comp.order
+                if iname in comp.instrs[u].operands]
+        if uses and all(u.opcode in _SLICE_READERS for u in uses):
+            total += sum(_shape_elems_bytes(u.shape_str)[1] for u in uses)
+        elif 0 <= pidx < len(opnd_sizes):
+            total += opnd_sizes[pidx]
+    if root_name is not None:
+        root = comp.instrs[root_name]
+        if root.opcode == "dynamic-update-slice" and root.operands:
+            upd = root.operands[1] if len(root.operands) > 1 else None
+            total += (_shape_elems_bytes(comp.instrs[upd].shape_str)[1]
+                      if upd in comp.instrs else 0.0)
+        else:
+            total += _shape_elems_bytes(root.shape_str)[1]
+    return total
+
+
+def analyze(text: str) -> Cost:
+    comps, entry = parse_module(text)
+    memo: Dict[str, Cost] = {}
+
+    def comp_cost(name: str, for_bytes: bool = True) -> Cost:
+        key = name + ("/b" if for_bytes else "/f")
+        if key in memo:
+            return memo[key]
+        total = Cost()
+        comp = comps.get(name)
+        if comp is None:
+            return total
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            op = ins.opcode
+            res_elems, res_bytes = _shape_elems_bytes(ins.shape_str)
+
+            def _op_bytes(idx: int) -> int:
+                if idx < len(ins.operands) and ins.operands[idx] in comp.instrs:
+                    return _shape_elems_bytes(
+                        comp.instrs[ins.operands[idx]].shape_str)[1]
+                return 0
+
+            opnd_bytes = sum(_op_bytes(i) for i in range(len(ins.operands)))
+            # in-place slice updates move only the slice, not the buffer
+            if op == "dynamic-update-slice":
+                opnd_bytes = 2 * _op_bytes(1)
+                res_bytes = 0
+            elif op == "dynamic-slice":
+                opnd_bytes = res_bytes
+            elif op == "scatter":
+                opnd_bytes = 2 * _op_bytes(2) + _op_bytes(1)
+                res_bytes = 0
+            elif op == "gather":
+                opnd_bytes = res_bytes + _op_bytes(1)
+            c = Cost()
+            if op == "dot":
+                c.flops = _dot_flops(comp, ins)
+                if for_bytes:
+                    c.bytes = opnd_bytes + res_bytes
+            elif op in ("fusion", "call"):
+                mcall = _CALLS.search(ins.raw)
+                if mcall:
+                    inner = comp_cost(mcall.group(1), for_bytes=False)
+                    c += inner
+                    if for_bytes:
+                        c.bytes += _fusion_boundary_bytes(
+                            comps, mcall.group(1), ins, comp)
+                elif for_bytes:
+                    c.bytes += opnd_bytes + res_bytes
+            elif op == "while":
+                trip = _trip_count(comps, ins)
+                mb = _BODY.search(ins.raw)
+                if mb:
+                    c += comp_cost(mb.group(1), for_bytes=for_bytes).scaled(trip)
+            elif op == "conditional":
+                branches = re.findall(r"(?:true_computation|false_computation|"
+                                      r"branch_computations=\{)([^,}]*)",
+                                      ins.raw)
+                names = re.findall(r"%([\w.\-]+)", ",".join(branches))
+                if names:
+                    cs = [comp_cost(n, for_bytes=for_bytes) for n in names]
+                    best = max(cs, key=lambda x: x.flops + x.bytes)
+                    c += best
+                if for_bytes:
+                    c.bytes += opnd_bytes + res_bytes
+            elif op.startswith(_COLLECTIVES) or any(
+                    op == x or op == x + "-start" for x in _COLLECTIVES):
+                base = op.replace("-start", "")
+                if base in _COLLECTIVES and not op.endswith("-done"):
+                    g = _group_size(ins.raw)
+                    if base == "all-reduce":
+                        wire = 2 * res_bytes * max(0, g - 1) / max(1, g)
+                    elif base == "all-gather":
+                        wire = res_bytes * max(0, g - 1) / max(1, g)
+                    elif base == "reduce-scatter":
+                        wire = res_bytes * max(0, g - 1)
+                    else:
+                        wire = res_bytes
+                    c.coll_wire_bytes = wire
+                    c.coll_counts[base] = 1
+                    c.coll_bytes[base] = res_bytes
+                    if for_bytes:
+                        c.bytes = opnd_bytes + res_bytes
+            elif op in ("reduce", "reduce-window"):
+                c.flops = float(opnd_bytes and res_elems or res_elems)
+                # approximate: one op per input element
+                in_elems = sum(_shape_elems_bytes(comp.instrs[o].shape_str)[0]
+                               for o in ins.operands if o in comp.instrs)
+                c.flops = float(in_elems)
+                if for_bytes:
+                    c.bytes = opnd_bytes + res_bytes
+            elif op in _ELEMWISE:
+                c.flops = float(res_elems)
+                if for_bytes:
+                    c.bytes = opnd_bytes + res_bytes
+            elif op in ("parameter", "constant", "get-tuple-element", "tuple",
+                        "bitcast", "copy-start", "copy-done",
+                        "after-all", "partition-id", "replica-id"):
+                pass
+            else:
+                # data movement (scatter, gather, dynamic-slice, transpose,
+                # broadcast, reshape, concatenate, pad, copy, iota, ...)
+                if for_bytes:
+                    c.bytes = opnd_bytes + res_bytes
+            if c.bytes and op not in ("while", "conditional"):
+                # tag direct contributions only (loop bodies keep their own tags)
+                direct = c.bytes - sum(c.bytes_by_op.values())
+                if direct > 0:
+                    c.bytes_by_op[op] = c.bytes_by_op.get(op, 0) + direct
+            total += c
+        memo[key] = total
+        return total
+
+    if entry is None:
+        return Cost()
+    return comp_cost(entry, for_bytes=True)

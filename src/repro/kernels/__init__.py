@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the sketch hot path (update = one-hot MXU matmul,
+query = one-hot gather + row-min), with jnp oracles in ref.py and jitd
+wrappers in ops.py.  Validated in interpret mode on CPU; set
+interpret=False on TPU."""
+from repro.kernels.hashes import IndexPlan, make_plan  # noqa: F401
+from repro.kernels.ops import KernelSketch  # noqa: F401

@@ -1,0 +1,64 @@
+"""In-kernel composite index computation (shared by update/query kernels).
+
+TPU Pallas has no 64-bit integer lanes, so all hashing is the uint32
+two-limb Carter-Wegman arithmetic from ``repro.core.hashing`` -- those
+functions are pure jnp and run unchanged inside Pallas kernel bodies.
+This module provides the kernel-side "compute the composite cell index for
+one sketch row" helper plus the static chunk-layout metadata both kernels
+need.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.hashing import addmod_p31, mulmod_p31_16
+from repro.core.sketch import SketchSpec
+
+
+class IndexPlan(NamedTuple):
+    """Static (hashable) layout extracted from a SketchSpec for kernels."""
+    group_cols: Tuple[Tuple[int, ...], ...]   # chunk columns per group
+    ranges: Tuple[int, ...]
+    strides: Tuple[int, ...]
+    total_chunks: int
+    width: int
+
+    @property
+    def table_size(self) -> int:
+        out = 1
+        for r in self.ranges:
+            out *= int(r)
+        return out
+
+
+def make_plan(spec: SketchSpec) -> IndexPlan:
+    return IndexPlan(
+        group_cols=tuple(spec.group_chunk_columns(j) for j in range(spec.n_groups)),
+        ranges=spec.ranges,
+        strides=spec.strides,
+        total_chunks=spec.schema.total_chunks,
+        width=spec.width,
+    )
+
+
+def row_indices(plan: IndexPlan, chunks: jnp.ndarray, q_row: jnp.ndarray,
+                r_row: jnp.ndarray) -> jnp.ndarray:
+    """Composite cell index for ONE sketch row.
+
+    chunks: uint32[B, C]   16-bit key digits
+    q_row:  uint32[C]      this row's multipliers
+    r_row:  uint32[m]      this row's per-group offsets
+    returns int32[B] cell indices in [0, h)
+    """
+    b = chunks.shape[0]
+    idx = jnp.zeros((b,), dtype=jnp.uint32)
+    for j, (cols, rng_j, stride_j) in enumerate(
+        zip(plan.group_cols, plan.ranges, plan.strides)
+    ):
+        acc = jnp.broadcast_to(r_row[j], (b,)).astype(jnp.uint32)
+        for c in cols:
+            acc = addmod_p31(acc, mulmod_p31_16(q_row[c], chunks[:, c]))
+        idx = idx + (acc % jnp.uint32(rng_j)) * jnp.uint32(stride_j)
+    return idx.astype(jnp.int32)

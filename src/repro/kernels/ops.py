@@ -1,0 +1,81 @@
+"""Jit'd public wrappers around the Pallas sketch kernels.
+
+These adapt the high-level ``SketchSpec``/``SketchState`` API (core/sketch.py)
+to the kernels: chunk extraction, padding the table width to the tile size,
+padding stream blocks to a fixed block length (so one compiled kernel serves
+the whole stream), and CPU fallback via ``interpret=True`` (the kernel body
+executes in Python on CPU -- bit-identical logic, which is how the kernels
+are validated in this container; on TPU set ``interpret=False``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.kernels import ref
+from repro.kernels.hashes import IndexPlan, make_plan
+from repro.kernels.sketch_update import padded_table_size, sketch_update_pallas
+from repro.kernels.sketch_query import sketch_query_pallas
+
+_MAX_KERNEL_FREQ = 1 << 24  # two 12-bit limbs
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+class KernelSketch:
+    """Sketch whose table lives padded for the Pallas kernels."""
+
+    def __init__(self, spec: sk.SketchSpec, key: jax.Array, *,
+                 tile_h: int = 512, block_b: int = 1024,
+                 dtype=jnp.int32, interpret: Optional[bool] = None):
+        self.spec = spec
+        self.plan = make_plan(spec)
+        self.params = sk.init_params(spec, key)
+        self.tile_h = int(tile_h)
+        self.block_b = int(block_b)
+        self.h_pad = padded_table_size(spec.table_size, tile_h)
+        self.table = jnp.zeros((spec.width, self.h_pad), dtype=dtype)
+        self.interpret = default_interpret() if interpret is None else interpret
+
+    # -- stream ops ---------------------------------------------------------
+    def update(self, items, freqs) -> None:
+        items = np.asarray(items, dtype=np.uint32)
+        freqs = np.asarray(freqs)
+        if freqs.max(initial=0) >= _MAX_KERNEL_FREQ:
+            raise ValueError("per-arrival frequency >= 2^24: use core.sketch path")
+        b = self.block_b
+        for s in range(0, items.shape[0], b):
+            blk_i = items[s : s + b]
+            blk_f = freqs[s : s + b]
+            if blk_i.shape[0] < b:
+                pad = b - blk_i.shape[0]
+                blk_i = np.pad(blk_i, ((0, pad), (0, 0)))
+                blk_f = np.pad(blk_f, (0, pad))
+            chunks = self.spec.schema.module_chunks(jnp.asarray(blk_i))
+            self.table = sketch_update_pallas(
+                self.plan, self.table, chunks, jnp.asarray(blk_f),
+                self.params.q, self.params.r,
+                tile_h=self.tile_h, interpret=self.interpret,
+            )
+
+    def query(self, items) -> np.ndarray:
+        items = np.asarray(items, dtype=np.uint32)
+        chunks = self.spec.schema.module_chunks(jnp.asarray(items))
+        est = sketch_query_pallas(
+            self.plan, self.table, chunks, self.params.q, self.params.r,
+            tile_h=self.tile_h, interpret=self.interpret,
+        )
+        return np.asarray(est)
+
+    # -- interop ------------------------------------------------------------
+    def state(self) -> sk.SketchState:
+        """Unpadded SketchState view (for merge with the reference path)."""
+        return sk.SketchState(params=self.params,
+                              table=self.table[:, : self.spec.table_size])

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: batched point queries as one-hot gathers + row-min.
+
+Per (row k, range tile t): each of Q queries hits at most one cell of the
+tile, so the gather is an MXU contraction ``vals[q] = onehot[q, :] .
+table[k, tile]`` accumulated over tiles (every query hits exactly one tile
+per row).  Table values are split into two 16-bit limbs before the f32
+contraction -- each query's sum is a single limb value < 2^16, so the gather
+is exact for counts up to 2^32.  The final Count-Min ``min`` over the w rows
+is a trivial VPU reduce done by the wrapper.
+
+Grid = (w, h/TILE_H); the output (w, Q) block for row k is revisited across
+the tile axis (initialized at t == 0, accumulated after) -- the standard
+Pallas TPU reduction-by-revisiting pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.hashes import IndexPlan, row_indices
+
+
+def _query_kernel(plan: IndexPlan, tile_h: int,
+                  chunks_ref, q_ref, r_ref, tlo_ref, thi_ref, out_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = row_indices(plan, chunks_ref[...], q_ref[0], r_ref[0])     # int32[Q]
+    local = idx - t * tile_h
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)           # [Q, TH]
+    glo = jnp.dot(onehot, tlo_ref[0][:, None],
+                  preferred_element_type=jnp.float32)                # [Q, 1]
+    ghi = jnp.dot(onehot, thi_ref[0][:, None],
+                  preferred_element_type=jnp.float32)
+    val = glo.astype(jnp.int32) + (ghi.astype(jnp.int32) << 16)      # exact
+    out_ref[...] = out_ref[...] + val[:, 0][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "tile_h", "interpret"))
+def sketch_query_pallas(
+    plan: IndexPlan,
+    table: jax.Array,    # int32[w, h_pad]
+    chunks: jax.Array,   # uint32[Q, C]
+    q: jax.Array,        # uint32[w, C]
+    r: jax.Array,        # uint32[w, m]
+    *,
+    tile_h: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Count-Min estimates for Q queries: int32[Q]."""
+    w, h_pad = table.shape
+    if h_pad % tile_h:
+        raise ValueError(f"padded table width {h_pad} not a multiple of {tile_h}")
+    n_tiles = h_pad // tile_h
+    nq, c = chunks.shape
+    grid = (w, n_tiles)
+
+    ti = table.astype(jnp.int32)
+    tlo = (ti & jnp.int32(0xFFFF)).astype(jnp.float32)
+    thi = ((ti >> 16) & jnp.int32(0xFFFF)).astype(jnp.float32)
+
+    per_row = pl.pallas_call(
+        functools.partial(_query_kernel, plan, tile_h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nq, c), lambda k, t: (0, 0)),
+            pl.BlockSpec((1, c), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, r.shape[1]), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, tile_h), lambda k, t: (k, t)),
+            pl.BlockSpec((1, tile_h), lambda k, t: (k, t)),
+        ],
+        out_specs=pl.BlockSpec((1, nq), lambda k, t: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, nq), jnp.int32),
+        interpret=interpret,
+    )(chunks, q, r, tlo, thi)
+    return jnp.min(per_row, axis=0)

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: sketch update as one-hot x frequency MXU matmuls.
+
+TPU adaptation of the paper's scalar update loop (DESIGN.md S4): scatter-add
+is the canonical TPU anti-pattern, so a stream block of B items becomes, per
+(row k, range tile t), a dense one-hot matrix ``onehot[b, j] = (idx_b ==
+tile_start + j)`` contracted with the frequency vector on the MXU:
+
+    table[k, tile] += f^T . onehot          # collisions sum inside the MXU
+
+Grid = (w, h/TILE_H).  Per-step VMEM: the (B, TILE_H) one-hot + the (1,
+TILE_H) table tile + the (B, C) chunk block -- e.g. B=1024, TILE_H=512 is
+~2.2 MB, comfortably inside ~16 MB VMEM, with TILE_H a multiple of the
+128-lane width.  Hash evaluation (uint32 limb CW, core/hashing.py) runs on
+the VPU inside the kernel; it is recomputed per tile, which is deliberate --
+it is cheap VPU work that overlaps the MXU contraction and avoids an HBM
+round-trip for a (w, B) index tensor.
+
+Exactness for integer tables: frequencies are split into two 12-bit limbs so
+every f32 matmul accumulates sums < 2^23 (exactly representable); limbs are
+recombined in int32.  Valid for per-arrival f < 2^24 (wrapper-checked);
+larger weights take the jnp reference path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.hashes import IndexPlan, row_indices
+
+_LIMB_BITS = 12
+_LIMB_MASK = (1 << _LIMB_BITS) - 1
+
+
+def _update_kernel_int(plan: IndexPlan, tile_h: int,
+                       chunks_ref, flo_ref, fhi_ref, q_ref, r_ref,
+                       table_in_ref, table_out_ref):
+    """One (row, tile) step: int32 table, two 12-bit frequency limbs."""
+    t = pl.program_id(1)
+    idx = row_indices(plan, chunks_ref[...], q_ref[0], r_ref[0])      # int32[B]
+    local = idx - t * tile_h
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)            # [B, TH]
+    dot_lo = jnp.dot(flo_ref[...][None, :], onehot,
+                     preferred_element_type=jnp.float32)              # [1, TH]
+    dot_hi = jnp.dot(fhi_ref[...][None, :], onehot,
+                     preferred_element_type=jnp.float32)
+    delta = dot_lo.astype(jnp.int32) + (dot_hi.astype(jnp.int32) << _LIMB_BITS)
+    table_out_ref[...] = table_in_ref[...] + delta
+
+
+def _update_kernel_f32(plan: IndexPlan, tile_h: int,
+                       chunks_ref, f_ref, q_ref, r_ref,
+                       table_in_ref, table_out_ref):
+    """float32-table variant (gradient sketches): single MXU contraction."""
+    t = pl.program_id(1)
+    idx = row_indices(plan, chunks_ref[...], q_ref[0], r_ref[0])
+    local = idx - t * tile_h
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)
+    delta = jnp.dot(f_ref[...][None, :], onehot,
+                    preferred_element_type=jnp.float32)
+    table_out_ref[...] = table_in_ref[...] + delta[0][None, :]
+
+
+def padded_table_size(h: int, tile_h: int) -> int:
+    return ((h + tile_h - 1) // tile_h) * tile_h
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "tile_h", "interpret")
+)
+def sketch_update_pallas(
+    plan: IndexPlan,
+    table: jax.Array,    # [w, h_pad] int32 or float32, h_pad % tile_h == 0
+    chunks: jax.Array,   # uint32[B, C]
+    freqs: jax.Array,    # int32[B] or float32[B]
+    q: jax.Array,        # uint32[w, C]
+    r: jax.Array,        # uint32[w, m]
+    *,
+    tile_h: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fold one stream block into the (padded) table. Returns the new table."""
+    w, h_pad = table.shape
+    if h_pad % tile_h:
+        raise ValueError(f"padded table width {h_pad} not a multiple of {tile_h}")
+    n_tiles = h_pad // tile_h
+    b, c = chunks.shape
+    grid = (w, n_tiles)
+
+    chunk_spec = pl.BlockSpec((b, c), lambda k, t: (0, 0))
+    f_spec = pl.BlockSpec((b,), lambda k, t: (0,))
+    q_spec = pl.BlockSpec((1, c), lambda k, t: (k, 0))
+    r_spec = pl.BlockSpec((1, r.shape[1]), lambda k, t: (k, 0))
+    tbl_spec = pl.BlockSpec((1, tile_h), lambda k, t: (k, t))
+
+    if jnp.issubdtype(table.dtype, jnp.integer):
+        flo = (freqs.astype(jnp.int32) & _LIMB_MASK).astype(jnp.float32)
+        fhi = (freqs.astype(jnp.int32) >> _LIMB_BITS).astype(jnp.float32)
+        kernel = functools.partial(_update_kernel_int, plan, tile_h)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[chunk_spec, f_spec, f_spec, q_spec, r_spec, tbl_spec],
+            out_specs=tbl_spec,
+            out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+            input_output_aliases={5: 0},
+            interpret=interpret,
+        )(chunks, flo, fhi, q, r, table)
+    else:
+        kernel = functools.partial(_update_kernel_f32, plan, tile_h)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[chunk_spec, f_spec, q_spec, r_spec, tbl_spec],
+            out_specs=tbl_spec,
+            out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+            input_output_aliases={4: 0},
+            interpret=interpret,
+        )(chunks, freqs.astype(table.dtype), q, r, table)

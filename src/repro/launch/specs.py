@@ -1,0 +1,102 @@
+"""ShapeDtypeStruct stand-ins for every lowered step's inputs.
+
+No device allocation ever happens here: parameter/optimizer/cache trees come
+from ``jax.eval_shape`` over the real init functions, so the dry-run lowers
+the exact structures the runtime would use.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.training import train_loop as tl
+from repro.training.optimizer import OptimizerConfig
+
+PyTree = Any
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_state_specs(cfg: ModelConfig, tcfg: tl.TrainConfig) -> PyTree:
+    """eval_shape of init_train_state: params + opt (+ sketch) shapes."""
+    return jax.eval_shape(
+        lambda k: tl.init_train_state(cfg, tcfg, k), jax.random.PRNGKey(0))
+
+
+def batch_input_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Token batch (+ stub frontend embeddings) for one train/prefill step."""
+    out: Dict[str, Any] = {}
+    if cfg.n_enc_layers:
+        # enc-dec: seq budget split between source frames and target tokens
+        s_dec = max(2, seq // 2)
+        out["tokens"] = sds((batch, s_dec), jnp.int32)
+        out["embeds"] = sds((batch, seq - s_dec, cfg.d_model), cfg.activation_dtype)
+    elif cfg.frontend:
+        s_text = max(2, seq - cfg.frontend_len)
+        out["tokens"] = sds((batch, s_text), jnp.int32)
+        out["embeds"] = sds((batch, cfg.frontend_len, cfg.d_model),
+                            cfg.activation_dtype)
+    else:
+        out["tokens"] = sds((batch, seq), jnp.int32)
+    return out
+
+
+def decode_cache_specs(cfg: ModelConfig, batch: int, seq: int) -> PyTree:
+    enc_len = cfg.frontend_len if cfg.n_enc_layers else 0
+    return jax.eval_shape(
+        lambda: tfm.init_cache(cfg, batch, seq, enc_len=enc_len))
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    return {
+        "cache": decode_cache_specs(cfg, batch, seq),
+        "tokens_last": sds((batch, 1), jnp.int32),
+        "pos": sds((), jnp.int32),
+    }
+
+
+def input_specs(arch: str, shape_name: str,
+                tcfg: Optional[tl.TrainConfig] = None) -> Dict[str, Any]:
+    """All ShapeDtypeStruct inputs for one (arch x shape) dry-run cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    tcfg = tcfg or default_train_config(cfg)
+    kind = sh["kind"]
+    if kind == "train":
+        return {
+            "kind": "train",
+            "state": train_state_specs(cfg, tcfg),
+            "batch": batch_input_specs(cfg, b, s),
+        }
+    if kind == "prefill":
+        params = jax.eval_shape(
+            lambda k: tfm.init_params(cfg, k), jax.random.PRNGKey(0))
+        return {
+            "kind": "prefill",
+            "params": params,
+            "batch": batch_input_specs(cfg, b, s),
+        }
+    # decode: one new token against a seq_len cache
+    params = jax.eval_shape(
+        lambda k: tfm.init_params(cfg, k), jax.random.PRNGKey(0))
+    return {
+        "kind": "decode",
+        "params": params,
+        **decode_input_specs(cfg, b, s),
+    }
+
+
+def default_train_config(cfg: ModelConfig) -> tl.TrainConfig:
+    """Per-arch training defaults: int8 moments for >=100B-param models."""
+    n = cfg.param_count()["total"]
+    opt = OptimizerConfig(name="adamw8bit" if n > 60e9 else "adamw")
+    return tl.TrainConfig(optimizer=opt)

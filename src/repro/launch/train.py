@@ -1,0 +1,72 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant training loop on the local devices (full-config
+lowering at production scale is the dry-run's job; this driver actually
+executes steps, so defaults target the reduced configs / small models).
+The MOD-Sketch n-gram statistics run inside the step; checkpoints restart
+automatically via the Supervisor.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.core import sketch as sk
+from repro.training import train_loop as tl
+from repro.training.grad_compression import CompressionConfig
+from repro.training.optimizer import OptimizerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (default: reduced smoke config)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--no-sketch", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
+    tcfg = tl.TrainConfig(
+        optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                                  warmup_steps=max(1, args.steps // 20)),
+        microbatches=args.microbatches,
+        sketch_enabled=not args.no_sketch,
+        compression=CompressionConfig(enabled=args.grad_compression),
+    )
+    print(f"arch={cfg.name} params~{cfg.param_count()['total']:,} "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+    t0 = time.perf_counter()
+    state, history = tl.train(cfg, tcfg, args.steps, args.batch, args.seq,
+                              jax.random.PRNGKey(args.seed),
+                              ckpt_dir=args.ckpt_dir)
+    dt = time.perf_counter() - t0
+    losses = history["loss"]
+    print(f"done in {dt:.1f}s; loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    if tcfg.sketch_enabled:
+        spec = tl.make_sketch_spec(cfg)
+        st = sk.SketchState(params=state["sketch_params"],
+                            table=state["sketch_table"])
+        # top bigram frequency probe
+        toks = tl.synthetic_batches(cfg, args.batch, args.seq)(0)["tokens"]
+        grams = np.stack([toks[:, :-1].reshape(-1), toks[:, 1:].reshape(-1)],
+                         axis=1).astype(np.uint32)[:8]
+        est = np.asarray(sk.query_jit(spec, st, jnp.asarray(grams)))
+        print("sketch n-gram estimates (first batch bigrams):", est.tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""GQA/MQA attention: full, sliding-window, blockwise (long-seq), and
+single-token decode against a KV cache.
+
+Blockwise attention chunks the query axis with ``lax.scan`` (flash-style
+memory profile: the [B,H,S,S] logit tensor never materializes, only
+[B,H,Cq,S]); it is numerically identical to the dense path (same softmax,
+fp32 accumulation) and switches on automatically above
+``cfg.attn_chunk_threshold``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, softcap
+from repro.models.shard_ctx import DP, MP, constrain
+
+
+def make_attn_params(cfg: ModelConfig, key, *, cross: bool = False) -> Dict[str, jax.Array]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["bo"] = jnp.zeros((d,), dt)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p, x: jax.Array, kv_x: Optional[jax.Array] = None):
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    kv_src = x if kv_x is None else kv_x
+    q = x @ p["wq"]
+    k = kv_src @ p["wk"]
+    v = kv_src @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = constrain(q.reshape(b, x.shape[1], cfg.n_heads, hd), DP, None, MP, None)
+    k = constrain(k.reshape(b, kv_src.shape[1], cfg.n_kv_heads, hd), DP, None, MP, None)
+    v = constrain(v.reshape(b, kv_src.shape[1], cfg.n_kv_heads, hd), DP, None, MP, None)
+    return q, k, v
+
+
+def _expand_kv(cfg: ModelConfig, k: jax.Array) -> jax.Array:
+    """[B, S, n_kv, hd] -> [B, S, n_heads, hd] by repeating each kv head."""
+    rep = cfg.n_heads // cfg.n_kv_heads
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _attend(cfg: ModelConfig, q, k, v, mask) -> jax.Array:
+    """q: [B,Sq,H,hd], k/v: [B,Sk,H,hd], mask: [B or 1, 1, Sq, Sk] bool."""
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if cfg.attn_softcap:
+        logits = jnp.tanh(logits / cfg.attn_softcap) * cfg.attn_softcap
+    logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _causal_mask(sq: int, sk: int, q_offset, window: int) -> jax.Array:
+    """bool[1, 1, Sq, Sk]: causal (+ sliding window if window > 0)."""
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window:
+        m = m & (kpos > qpos - window)
+    return m[None, None]
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,                # [B, S, D]
+    positions: jax.Array,        # [B, S] or [S]
+    window: int,
+    causal: bool = True,
+) -> jax.Array:
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k = _expand_kv(cfg, k)
+    v = _expand_kv(cfg, v)
+
+    if causal and s > cfg.attn_chunk_threshold:
+        out = _blockwise_causal(cfg, q, k, v, window)
+    else:
+        if causal:
+            mask = _causal_mask(s, s, jnp.int32(0), window)
+        else:
+            mask = jnp.ones((1, 1, s, s), bool)
+        out = _attend(cfg, q, k, v, mask)
+    out = out.reshape(b, s, -1) @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+def _blockwise_causal(cfg: ModelConfig, q, k, v, window: int) -> jax.Array:
+    """Query-chunked causal attention (flash-style memory profile)."""
+    b, s, h, hd = q.shape
+    cq = min(cfg.attn_chunk, s)
+    n_chunks = s // cq
+    assert s % cq == 0, f"seq {s} % chunk {cq} != 0"
+    qc = q.reshape(b, n_chunks, cq, h, hd)
+
+    def step(_, ci):
+        qi = qc[:, ci]                                        # [B, Cq, H, hd]
+        offset = ci * cq
+        mask = _causal_mask(cq, s, offset, window)            # [1,1,Cq,S]
+        return None, _attend(cfg, qi, k, v, mask)
+
+    _, chunks = jax.lax.scan(step, None, jnp.arange(n_chunks))
+    # chunks: [n_chunks, B, Cq, H, hd] -> [B, S, H, hd]
+    return jnp.moveaxis(chunks, 0, 1).reshape(b, s, h, hd)
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,            # [B, Sq, D] decoder states
+    enc: jax.Array,          # [B, Sk, D] encoder output
+) -> jax.Array:
+    b, sq, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, kv_x=enc)
+    k = _expand_kv(cfg, k)
+    v = _expand_kv(cfg, v)
+    mask = jnp.ones((1, 1, sq, k.shape[1]), bool)
+    out = _attend(cfg, q, k, v, mask).reshape(b, sq, -1) @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode (single new token against a KV cache)
+# --------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, jax.Array]:
+    hd = cfg.resolved_head_dim
+    dt = cfg.activation_dtype
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+    }
+
+
+def decode_self_attention(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    cache: Dict[str, jax.Array],
+    x: jax.Array,              # [B, 1, D] the new token's hidden state
+    pos: jax.Array,            # int32[] or [B] current position
+    window: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k_new, v_new = _project_qkv(cfg, p, x)
+    posb = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))[:, None]   # [B,1]
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+    cache_k = _scatter_time(cache["k"], k_new, pos)
+    cache_v = _scatter_time(cache["v"], v_new, pos)
+    k = _expand_kv(cfg, cache_k)
+    v = _expand_kv(cfg, cache_v)
+    s = k.shape[1]
+    kpos = jnp.arange(s)[None, None, None, :]
+    mask = kpos <= posb[:, None, None, :]
+    if window:
+        mask = mask & (kpos > posb[:, None, None, :] - window)
+    out = _attend(cfg, q, k, v, mask).reshape(b, 1, -1) @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out, {"k": cache_k, "v": cache_v}
+
+
+def _scatter_time(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write the [B, 1, ...] slice at time `pos` (same pos for the batch)."""
+    return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
+                                               pos, axis=1)

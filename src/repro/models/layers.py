@@ -1,0 +1,111 @@
+"""Shared neural-net layers (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def make_norm_params(cfg: ModelConfig, d: int) -> Dict[str, jax.Array]:
+    p = {"scale": jnp.ones((d,), cfg.activation_dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.activation_dtype)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, n_heads, head_dim]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+
+def make_mlp_params(cfg: ModelConfig, key, d: int, f: int) -> Dict[str, jax.Array]:
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 3)
+    p: Dict[str, jax.Array] = {}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[0], d, f, dt)
+        p["w_in"] = dense_init(ks[1], d, f, dt)
+    else:
+        p["w_in"] = dense_init(ks[1], d, f, dt)
+    p["w_out"] = dense_init(ks[2], f, d, dt)
+    if cfg.use_bias:
+        p["b_in"] = jnp.zeros((f,), dt)
+        p["b_out"] = jnp.zeros((d,), dt)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])
+    elif cfg.mlp_type == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_in"])
+    else:
+        h = x @ p["w_in"]
+        if "b_in" in p:
+            h = h + p["b_in"]
+        h = jax.nn.gelu(h, approximate=True)
+    y = h @ p["w_out"]
+    if "b_out" in p:
+        y = y + p["b_out"]
+    return y
+
+
+# --------------------------------------------------------------------------
+# misc
+# --------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return (jnp.tanh(x / cap) * cap).astype(x.dtype)

@@ -1,0 +1,237 @@
+"""Sharding rules: param/optimizer/batch/cache PartitionSpecs per mesh.
+
+Layout (DESIGN.md S5): 2-D sharding -- tensor-parallel over ``model``
+(attention heads, FFN hidden, vocab, MoE expert FFN, SSD heads) x
+FSDP/ZeRO-3-style over the data axes (``data`` or ``("pod","data")``) on the
+other big dimension.  Every rule is path+rank based over the real param
+tree, so it applies uniformly to the stacked-block layout (leading
+``n_blocks`` dim -> spec prepended with None).
+
+Decode caches: batch over data axes and *sequence over model* -- decode
+attention is then sequence-parallel (flash-decoding style: partial softmax
+stats psum over ``model``); ``long_500k`` (batch=1) shards the sequence over
+every axis.  SSM decode caches shard SSD heads over ``model``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.training.optimizer import Moment8
+
+PyTree = Any
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    """(data_axes, model_axis) for single-pod / multi-pod meshes."""
+    names = mesh.axis_names
+    if names[-1] != "model":
+        raise ValueError(f"expected trailing 'model' axis, got {names}")
+    return tuple(names[:-1]), "model"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _param_rule(path: str, ndim: int, dp, mp) -> P:
+    """PartitionSpec for one (unstacked) parameter leaf."""
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf in ("embed",):
+        return P(mp, dp)                       # (V, D): vocab TP, d FSDP
+    if leaf == "lm_head":
+        return P(dp, mp)                       # (D, V)
+    if leaf in ("wq", "wk", "wv", "w_gate", "w_in", "in_proj"):
+        return P(dp, mp)                       # (D, out): out TP
+    if leaf in ("wo", "w_out", "out_proj"):
+        return P(mp, dp)                       # (in, D): in TP
+    if leaf == "router":
+        return P(dp, None)                     # (D, E): experts replicated
+    if leaf in ("bq", "bk", "bv", "b_in"):
+        return P(mp)
+    if leaf in ("bo", "b_out"):
+        return P(None)
+    if leaf == "conv_w":
+        return P(None, mp)                     # (K, C)
+    if leaf == "conv_b":
+        return P(mp)
+    if leaf == "norm_scale":
+        return P(mp)                           # (d_inner,) SSD gated norm
+    if leaf in ("dt_bias", "a_log", "d_skip"):
+        return P(None)                         # tiny per-head vectors
+    if leaf in ("scale", "bias"):
+        return P(None)                         # layer norms
+    return P(*([None] * ndim))
+
+
+def _moe_rule(path: str, ndim: int, dp, mp, mode: str = "2d") -> Optional[P]:
+    """Expert-stacked leaves: (E, D, F) / (E, F, D).
+
+    mode "2d": D over data axes, F over model (TPxFSDP; contraction dims
+    sharded -> partial-sum ARs of the [G,E,C,F] intermediates in the
+    grouped-dispatch path).  mode "f_allaxes": F over ALL axes, D unsharded
+    -- contraction over D is local, the F-psum over model is the only
+    reduction, and the FSDP memory share is preserved (SPerf cell A iter 4).
+    """
+    leaf = path.rsplit("/", 1)[-1]
+    if "moe" not in path:
+        return None
+    axes_all = (dp if isinstance(dp, tuple) else (dp,)) + (mp,)
+    if leaf in ("w_gate", "w_in"):
+        return P(None, None, axes_all) if mode == "f_allaxes" else P(None, dp, mp)
+    if leaf == "w_out":
+        return P(None, axes_all, None) if mode == "f_allaxes" else P(None, mp, dp)
+    return None
+
+
+def param_pspec(path: str, ndim: int, dp, mp, stacked: bool,
+                moe_mode: str = "2d") -> P:
+    """Spec for a leaf; ``stacked`` leaves get a leading None (block dim)."""
+    inner_ndim = ndim - 1 if stacked else ndim
+    rule = _moe_rule(path, inner_ndim, dp, mp, moe_mode) \
+        or _param_rule(path, inner_ndim, dp, mp)
+    parts = list(rule) + [None] * (inner_ndim - len(rule))
+    if stacked:
+        parts = [None] + parts
+    return P(*parts)
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes from dims they do not divide (jit requires exact
+    divisibility of input shardings).  Axes are dropped from the right of a
+    dim's axis tuple until the remaining product divides the dim."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, parts):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = list(ax) if isinstance(ax, tuple) else [ax]
+        while axes:
+            prod = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % prod == 0:
+                break
+            axes.pop()
+        out.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def sanitize_specs(specs: PyTree, shapes: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s, x: sanitize_spec(s, x.shape, mesh), specs, shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def param_specs(cfg: ModelConfig, params_shape: PyTree, mesh: Mesh) -> PyTree:
+    """PartitionSpec pytree matching the param tree (from eval_shape)."""
+    dp_axes, mp = mesh_axes(mesh)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def spec_of(path, leaf):
+        ps = _path_str(path)
+        leafname = ps.rsplit("/", 1)[-1]
+        # vocab-carrying leaves: preference chain (odd vocab sizes fall back
+        # to sharding d_model on the model axis rather than dropping TP)
+        if leafname == "embed":
+            chain = (P(mp, dp), P(None, mp), P(None, dp))
+        elif leafname == "lm_head":
+            chain = (P(dp, mp), P(mp, None), P(dp, None))
+        else:
+            chain = None
+        if chain is not None:
+            for cand in chain:
+                if sanitize_spec(cand, leaf.shape, mesh) == cand:
+                    return cand
+            return sanitize_spec(chain[0], leaf.shape, mesh)
+        stacked = ps.startswith("blocks") or ps.startswith("enc_blocks")
+        return sanitize_spec(param_pspec(ps, leaf.ndim, dp, mp, stacked,
+                                         getattr(cfg, "moe_weight_shard", "2d")),
+                             leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def opt_state_specs(cfg: ModelConfig, opt_shape: PyTree, pspecs: PyTree,
+                    mesh: Mesh) -> PyTree:
+    """Optimizer-state specs mirror the param specs (incl. Moment8 leaves).
+
+    Moment8.q has the param's shape; Moment8.scale has the same rank (last
+    dim / 128) so the same spec applies to both.
+    """
+    def expand(ps, leaf):
+        if isinstance(leaf, Moment8):
+            return Moment8(q=sanitize_spec(ps, leaf.q.shape, mesh),
+                           scale=sanitize_spec(ps, leaf.scale.shape, mesh))
+        return sanitize_spec(ps, leaf.shape, mesh)
+
+    return {
+        "m": jax.tree.map(expand, pspecs, opt_shape["m"],
+                          is_leaf=lambda x: isinstance(x, Moment8)),
+        "v": jax.tree.map(expand, pspecs, opt_shape["v"],
+                          is_leaf=lambda x: isinstance(x, Moment8)),
+        "step": P(),
+    }
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, with_embeds: bool):
+    dp_axes, _ = mesh_axes(mesh)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    tokens = P(dp, None)
+    if not with_embeds:
+        return {"tokens": tokens}
+    return {"tokens": tokens, "embeds": P(dp, None, None)}
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: PyTree, mesh: Mesh,
+                batch: int) -> PyTree:
+    """Decode-cache specs (stacked leading n_blocks dim on every leaf)."""
+    dp_axes, mp = mesh_axes(mesh)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    n_data = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    batch_sharded = batch >= n_data
+
+    def spec_of(path, leaf):
+        ps = _path_str(path)
+        leafname = ps.rsplit("/", 1)[-1]
+        if leafname in ("k", "v", "cross_k", "cross_v"):
+            # (blocks, B, S, kv, hd)
+            if batch_sharded:
+                return P(None, dp, mp, None, None)
+            return P(None, None, (*dp_axes, mp), None, None)
+        if leafname == "ssm":
+            # (blocks, B, H, N, P)
+            if batch_sharded:
+                return P(None, dp, mp, None, None)
+            return P(None, None, mp, None, None)
+        if leafname == "conv":
+            # (blocks, B, K-1, C)
+            if batch_sharded:
+                return P(None, dp, None, mp)
+            return P(None, None, None, mp)
+        return P(*([None] * leaf.ndim))
+
+    def spec_of_safe(path, leaf):
+        return sanitize_spec(spec_of(path, leaf), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_of_safe, cache_shape)
+
+
+def to_shardings(mesh: Mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

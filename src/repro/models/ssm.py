@@ -1,0 +1,222 @@
+"""Mamba2 (SSD, state-space duality) mixer -- TPU-native chunked form.
+
+The sequence is processed in chunks of Q tokens inside one ``lax.scan``
+carrying the inter-chunk SSM state H in [B, heads, N, P]:
+
+  * intra-chunk: the quadratic "attention-like" branch -- masked decay
+    matrix L composed with C.B^T, contracted on the MXU,
+  * inter-chunk: the linear recurrence H' = decay * H + B^T.(dt*x).
+
+Streaming the chunks through the scan (rather than materializing all
+[B, nc, H, Q, Q] decay blocks at once) keeps the per-step working set at
+[B, H, Q, Q] -- the VMEM-conscious formulation (DESIGN.md S4).  Exponentials
+and cumulative sums run in fp32; contractions accumulate in fp32.
+
+Decode is the O(1) recurrence: conv ring-state + per-token state update --
+what makes ssm/hybrid archs eligible for the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.shard_ctx import DP, MP, constrain
+
+
+def make_ssm_params(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    din = cfg.ssm_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_ch = din + 2 * n                      # conv over [x, B, C]
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z (din), x (din), B (n), C (n), dt (h)]
+        "in_proj": dense_init(ks[0], d, 2 * din + 2 * n + h, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((din,), dt),
+        "out_proj": dense_init(ks[4], din, d, dt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    din, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    x = proj[..., din : 2 * din]
+    bmat = proj[..., 2 * din : 2 * din + n]
+    cmat = proj[..., 2 * din + n : 2 * din + 2 * n]
+    dt_raw = proj[..., 2 * din + 2 * n :]
+    return z, x, bmat, cmat, dt_raw
+
+
+def _causal_conv(p: Dict[str, jax.Array], u: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width K: u [B, S, C] -> [B, S, C]."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + pad[:, i : i + u.shape[1], :] * p["conv_w"][i]
+    return out + p["conv_b"]
+
+
+def _ssd_chunk_scan(cfg: ModelConfig, x, dtv, bmat, cmat, a, d_skip, h0):
+    """Chunked SSD.  x:[B,S,H,P] dtv:[B,S,H] bmat/cmat:[B,S,N] a:[H].
+
+    Returns (y [B,S,H,P], h_final [B,H,N,P]).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    s_orig = s
+    if s % q:
+        # pad the tail with dt = 0 entries: exp(0) decay leaves the state
+        # untouched and dt-weighted contributions vanish -- exact padding.
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // q
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dtv.reshape(b, nc, q, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+
+    def step(hstate, inputs):
+        x_c, dt_c, b_c, c_c = inputs          # [B,q,h,p] [B,q,h] [B,q,n] [B,q,n]
+        da = dt_c * a                          # [B,q,h] (a < 0)
+        cs = jnp.cumsum(da, axis=1)            # [B,q,h]
+        # intra-chunk: masked decay L[i,j] = exp(cs_i - cs_j), i >= j.
+        # Mask BEFORE exp: for i < j the diff is positive and exp overflows,
+        # and inf in the untaken where-branch still poisons the backward pass.
+        diff = cs[:, :, None, :] - cs[:, None, :, :]          # [B,i,j,h]
+        mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, :, :, None]
+        ldecay = jnp.where(mask, jnp.exp(jnp.where(mask, diff, 0.0)), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", c_c, b_c)             # [B,i,j]
+        m = cb[..., None] * ldecay                            # [B,i,j,h]
+        y_diag = jnp.einsum("bijh,bjh,bjhp->bihp", m, dt_c,
+                            x_c.astype(jnp.float32))
+        # contribution of the carried state
+        y_off = jnp.einsum("bin,bhnp->bihp", c_c, hstate) * \
+            jnp.exp(cs)[..., None]                            # [B,i,h,p]
+        # next state
+        decay_to_end = jnp.exp(cs[:, -1:, :] - cs)            # [B,j,h]
+        s_c = jnp.einsum("bjn,bjh,bjhp->bhnp", b_c, dt_c * decay_to_end,
+                         x_c.astype(jnp.float32))
+        h_next = jnp.exp(cs[:, -1, :])[:, :, None, None] * hstate + s_c
+        y = y_diag + y_off + d_skip[None, None, :, None] * x_c.astype(jnp.float32)
+        return h_next, y.astype(x_c.dtype)
+
+    inputs = (
+        jnp.moveaxis(xc, 1, 0),
+        jnp.moveaxis(dtc, 1, 0),
+        jnp.moveaxis(bc, 1, 0),
+        jnp.moveaxis(cc, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)[:, :s_orig]
+    return y, h_final
+
+
+def ssm_forward(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    u: jax.Array,                 # [B, S, D]
+    h0: jax.Array | None = None,  # [B, H, N, P] initial state
+    return_state: bool = False,
+):
+    b, s, _ = u.shape
+    din, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+
+    proj = u @ p["in_proj"]
+    z, x, bmat, cmat, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(p, conv_in))
+    x = constrain(conv_out[..., :din].reshape(b, s, h, pdim), DP, None, MP, None)
+    bmat = conv_out[..., din : din + n]
+    cmat = conv_out[..., din + n :]
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, pdim), jnp.float32)
+    y, h_final = _ssd_chunk_scan(cfg, x, dtv, bmat, cmat, a, p["d_skip"], h0)
+    y = y.reshape(b, s, din)
+
+    # gated RMSNorm + out projection
+    g = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(ms + cfg.norm_eps)).astype(u.dtype)
+    out = (g * p["norm_scale"]) @ p["out_proj"]
+    if return_state:
+        # conv ring state: last (K-1) channels-in inputs
+        k = cfg.ssm_conv
+        tail = jnp.concatenate(
+            [jnp.zeros((b, max(0, k - 1 - s), conv_in.shape[-1]), conv_in.dtype),
+             conv_in[:, max(0, s - (k - 1)):, :]], axis=1)
+        return out, {"ssm": h_final, "conv": tail}
+    return out
+
+
+# --------------------------------------------------------------------------
+# O(1) decode
+# --------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    din, n = cfg.ssm_inner, cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, n, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, din + 2 * n),
+                          cfg.activation_dtype),
+    }
+
+
+def ssm_decode(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    cache: Dict[str, jax.Array],
+    u: jax.Array,                 # [B, 1, D]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b = u.shape[0]
+    din, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+
+    proj = u[:, 0] @ p["in_proj"]                              # [B, *]
+    z, x, bmat, cmat, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)        # [B, C]
+    window = jnp.concatenate([cache["conv"], conv_in[:, None, :]], axis=1)  # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(u.dtype)
+    x = conv_out[:, :din].reshape(b, h, pdim)
+    bmat = conv_out[:, din : din + n].astype(jnp.float32)      # [B, N]
+    cmat = conv_out[:, din + n :].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    a = -jnp.exp(p["a_log"])
+
+    decay = jnp.exp(dtv * a)                                    # [B, H]
+    hs = cache["ssm"] * decay[:, :, None, None] + \
+        jnp.einsum("bn,bh,bhp->bhnp", bmat, dtv, x.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", cmat, hs) + \
+        p["d_skip"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, din)
+
+    g = y.astype(u.dtype) * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(ms + cfg.norm_eps)).astype(u.dtype)
+    out = ((g * p["norm_scale"]) @ p["out_proj"])[:, None, :]
+    new_cache = {"ssm": hs, "conv": window[:, 1:, :]}
+    return out, new_cache

@@ -1,0 +1,471 @@
+"""Layer-stack assembly: init + forward + prefill + decode for all families.
+
+The stack is a ``lax.scan`` over ``n_blocks`` stacked parameter blocks, each
+block holding ``cfg.block_period`` heterogeneously-typed sublayers with a
+*static* per-position kind (attn/mamba, mlp/moe, local/global window) --
+this keeps the HLO proportional to one block at any depth (compile-time at
+512 devices) and gives remat a natural boundary.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.shard_ctx import DP, MP, constrain
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    dense_init,
+    make_mlp_params,
+    make_norm_params,
+    softcap,
+)
+
+Params = Dict[str, Any]
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+
+def _make_layer_params(cfg: ModelConfig, key, i: int, *, cross: bool = False) -> Params:
+    """Params for sublayer position i of a block."""
+    ks = jax.random.split(key, 6)
+    kind = cfg.layer_kind(i)
+    p: Params = {"norm1": make_norm_params(cfg, cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = attn.make_attn_params(cfg, ks[0])
+    else:
+        p["ssm"] = ssm_mod.make_ssm_params(cfg, ks[0])
+    if cross:
+        p["norm_cross"] = make_norm_params(cfg, cfg.d_model)
+        p["cross"] = attn.make_attn_params(cfg, ks[1], cross=True)
+    if cfg.d_ff and not cfg.parallel_block:
+        p["norm2"] = make_norm_params(cfg, cfg.d_model)
+    if cfg.layer_is_moe(i):
+        p["moe"] = moe_mod.make_moe_params(cfg, ks[2])
+    elif cfg.d_ff:
+        p["mlp"] = make_mlp_params(cfg, ks[3], cfg.d_model, cfg.d_ff)
+    if cfg.post_block_norm:
+        p["post_attn_norm"] = make_norm_params(cfg, cfg.d_model)
+        if cfg.d_ff:
+            p["post_ff_norm"] = make_norm_params(cfg, cfg.d_model)
+    return p
+
+
+def _make_block_params(cfg: ModelConfig, key, *, cross: bool = False) -> Params:
+    ks = jax.random.split(key, cfg.block_period)
+    return {f"layer_{i}": _make_layer_params(cfg, ks[i], i, cross=cross)
+            for i in range(cfg.block_period)}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    block_keys = jax.random.split(ks[0], cfg.n_blocks)
+    params: Params = {
+        "embed": embed_init(ks[1], cfg.padded_vocab, cfg.d_model,
+                            cfg.activation_dtype),
+        "blocks": jax.vmap(lambda k: _make_block_params(
+            cfg, k, cross=bool(cfg.n_enc_layers)))(block_keys),
+        "final_norm": make_norm_params(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.padded_vocab,
+                                       cfg.activation_dtype)
+    if cfg.n_enc_layers:
+        enc_keys = jax.random.split(ks[3], cfg.n_enc_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: {"layer_0": _make_layer_params(cfg, k, 0)})(enc_keys)
+        params["enc_final_norm"] = make_norm_params(cfg, cfg.d_model)
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ==========================================================================
+# forward building blocks
+# ==========================================================================
+
+def _apply_layer_train(cfg: ModelConfig, lp: Params, x: jax.Array,
+                       positions: jax.Array, i: int,
+                       enc: Optional[jax.Array], aux: Dict[str, jax.Array],
+                       causal: bool = True) -> jax.Array:
+    kind = cfg.layer_kind(i)
+    h = apply_norm(cfg, lp["norm1"], x)
+    if kind == "attn":
+        mix = attn.self_attention(cfg, lp["attn"], h, positions,
+                                  cfg.layer_window(i), causal=causal)
+    else:
+        mix = ssm_mod.ssm_forward(cfg, lp["ssm"], h)
+    if cfg.post_block_norm:
+        mix = apply_norm(cfg, lp["post_attn_norm"], mix)
+
+    if cfg.parallel_block and "mlp" in lp:
+        x = x + mix + apply_mlp(cfg, lp["mlp"], h)
+        return x
+    x = x + mix
+
+    if enc is not None and "cross" in lp:
+        hc = apply_norm(cfg, lp["norm_cross"], x)
+        x = x + attn.cross_attention(cfg, lp["cross"], hc, enc)
+
+    if "moe" in lp:
+        h2 = apply_norm(cfg, lp["norm2"], x)
+        y, moe_aux = moe_mod.apply_moe(cfg, lp["moe"], h2)
+        aux["lb_loss"] = aux.get("lb_loss", 0.0) + moe_aux["lb_loss"]
+        aux["dropped_frac"] = aux.get("dropped_frac", 0.0) + moe_aux["dropped_frac"]
+        if cfg.post_block_norm:
+            y = apply_norm(cfg, lp["post_ff_norm"], y)
+        x = x + y
+    elif "mlp" in lp:
+        h2 = apply_norm(cfg, lp["norm2"], x)
+        y = apply_mlp(cfg, lp["mlp"], h2)
+        if cfg.post_block_norm:
+            y = apply_norm(cfg, lp["post_ff_norm"], y)
+        x = x + y
+    return x
+
+
+def _stack_forward(cfg: ModelConfig, blocks: Params, x: jax.Array,
+                   positions: jax.Array, enc: Optional[jax.Array] = None,
+                   causal: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """scan over stacked blocks; returns (hidden, summed aux)."""
+
+    def block_fn(carry, bp):
+        h = constrain(carry, DP, None, None)
+        aux: Dict[str, jax.Array] = {}
+        for i in range(cfg.block_period):
+            h = _apply_layer_train(cfg, bp[f"layer_{i}"], h, positions, i,
+                                   enc, aux, causal=causal)
+            h = constrain(h, DP, None, None)
+        ys = {
+            "lb_loss": jnp.asarray(aux.get("lb_loss", 0.0), jnp.float32),
+            "dropped_frac": jnp.asarray(aux.get("dropped_frac", 0.0), jnp.float32),
+        }
+        return h, ys
+
+    if cfg.remat:
+        block_fn = jax.checkpoint(
+            block_fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, ys = jax.lax.scan(block_fn, x, blocks)
+    return x, {k: jnp.sum(v) for k, v in ys.items()}
+
+
+def _logits(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if logits.ndim == 3:
+        logits = constrain(logits, DP, None, MP)
+    else:
+        logits = constrain(logits, DP, MP)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # padded vocab rows exist only for TP divisibility: mask them out of
+        # every softmax/argmax downstream
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    if cfg.logit_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits.astype(jnp.float32)
+
+
+def _embed(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    x = params["embed"][tokens]
+    x = constrain(x, DP, None, None)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    return x
+
+
+def _encode(cfg: ModelConfig, params: Params, embeds: jax.Array) -> jax.Array:
+    pos = jnp.arange(embeds.shape[1])
+    h, _ = _stack_forward(cfg, params["enc_blocks"], embeds, pos, causal=False)
+    return apply_norm(cfg, params["enc_final_norm"], h)
+
+
+# ==========================================================================
+# public entry points
+# ==========================================================================
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,                 # int32[B, S_text]
+    embeds: Optional[jax.Array] = None,  # [B, F, D] frontend stub prefix
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Training/prefill forward -> (logits [B, S_total, V], aux)."""
+    x, aux = hidden_forward(cfg, params, tokens, embeds=embeds)
+    return _logits(cfg, params, x), aux
+
+
+def hidden_forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Forward up to the final norm (no unembedding)."""
+    x = _embed(cfg, params, tokens)
+    enc = None
+    if cfg.n_enc_layers:
+        enc = _encode(cfg, params, embeds)
+    elif embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    x, aux = _stack_forward(cfg, params["blocks"], x, positions, enc=enc)
+    return apply_norm(cfg, params["final_norm"], x), aux
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    embeds: Optional[jax.Array] = None,
+    lb_coef: float = 0.01,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross-entropy (text positions only) + MoE aux loss.
+
+    With ``cfg.loss_chunk > 0`` the [B, S, V] logit tensor never
+    materializes: a rematerialized scan computes per-chunk logits ->
+    log-softmax -> NLL and discards them (SPerf memory-term optimization).
+    """
+    hidden, aux = hidden_forward(cfg, params, tokens, embeds=embeds)
+    n_prefix = hidden.shape[1] - tokens.shape[1]
+    hx = hidden[:, n_prefix : n_prefix + tokens.shape[1] - 1, :]  # predictors
+    tgt = tokens[:, 1:]
+
+    if cfg.loss_chunk and hx.shape[1] > cfg.loss_chunk:
+        ck = cfg.loss_chunk
+        n_tok = hx.shape[1]
+        pad = (-n_tok) % ck                     # pad to a chunk multiple;
+        if pad:                                 # padded positions are masked
+            hx = jnp.pad(hx, ((0, 0), (0, pad), (0, 0)))
+            tgt = jnp.pad(tgt, ((0, 0), (0, pad)))
+        valid = (jnp.arange(hx.shape[1]) < n_tok)
+        nc = hx.shape[1] // ck
+        hc = hx.reshape(hx.shape[0], nc, ck, hx.shape[-1])
+        tc = tgt.reshape(tgt.shape[0], nc, ck)
+        vc = valid.reshape(nc, ck)
+
+        def chunk_nll(args):
+            h_c, t_c, v_c = args                         # [B,ck,D], [B,ck], [ck]
+            logits = _logits(cfg, params, h_c)
+            lp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(lp, t_c[..., None], axis=-1)[..., 0]
+            return jnp.sum(nll * v_c[None, :])
+
+        def scan_body(acc, args):
+            return acc + jax.checkpoint(chunk_nll)(args), None
+
+        total_nll, _ = jax.lax.scan(
+            scan_body, jnp.float32(0.0),
+            (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(tc, 1, 0), vc))
+        ce = total_nll / (hx.shape[0] * n_tok)
+    else:
+        logits = _logits(cfg, params, hx)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        nll = constrain(nll, DP, None)
+        ce = jnp.mean(nll)
+    total = ce + lb_coef * aux.get("lb_loss", 0.0)
+    metrics = {"ce": ce, **aux}
+    return total, metrics
+
+
+# --------------------------------------------------------------------------
+# caches: stacked per block, mirrors the block structure
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> Params:
+    """Decode cache, stacked over n_blocks (scan xs/ys structure)."""
+
+    def one_block():
+        c: Params = {}
+        for i in range(cfg.block_period):
+            kind = cfg.layer_kind(i)
+            if kind == "attn":
+                c[f"layer_{i}"] = attn.init_kv_cache(cfg, batch, max_len)
+            else:
+                c[f"layer_{i}"] = ssm_mod.init_ssm_cache(cfg, batch)
+            if cfg.n_enc_layers:
+                hd = cfg.resolved_head_dim
+                c[f"layer_{i}"]["cross_k"] = jnp.zeros(
+                    (batch, enc_len, cfg.n_kv_heads, hd), cfg.activation_dtype)
+                c[f"layer_{i}"]["cross_v"] = jnp.zeros(
+                    (batch, enc_len, cfg.n_kv_heads, hd), cfg.activation_dtype)
+        return c
+
+    blk = one_block()
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_blocks,) + x.shape), blk)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Params,
+    tokens_last: jax.Array,     # int32[B, 1]
+    pos: jax.Array,             # int32[] position of the new token
+) -> Tuple[jax.Array, Params]:
+    """One serve step: next-token logits + updated cache."""
+    x = _embed(cfg, params, tokens_last)
+
+    def block_fn(carry, xs):
+        h = carry
+        bp, bc = xs
+        new_bc: Params = {}
+        for i in range(cfg.block_period):
+            lp, lc = bp[f"layer_{i}"], bc[f"layer_{i}"]
+            kind = cfg.layer_kind(i)
+            hn = apply_norm(cfg, lp["norm1"], h)
+            if kind == "attn":
+                mix, upd = attn.decode_self_attention(
+                    cfg, lp["attn"], {"k": lc["k"], "v": lc["v"]}, hn, pos,
+                    cfg.layer_window(i))
+                new_lc = dict(lc)
+                new_lc.update(upd)
+            else:
+                mix, upd = ssm_mod.ssm_decode(cfg, lp["ssm"], lc, hn)
+                new_lc = dict(lc)
+                new_lc.update(upd)
+            if cfg.post_block_norm:
+                mix = apply_norm(cfg, lp["post_attn_norm"], mix)
+            if cfg.parallel_block and "mlp" in lp:
+                h = h + mix + apply_mlp(cfg, lp["mlp"], hn)
+                new_bc[f"layer_{i}"] = new_lc
+                continue
+            h = h + mix
+            if "cross" in lp and "cross_k" in lc:
+                hc = apply_norm(cfg, lp["norm_cross"], h)
+                h = h + _decode_cross(cfg, lp["cross"], hc, lc)
+            if "moe" in lp:
+                h2 = apply_norm(cfg, lp["norm2"], h)
+                y, _ = moe_mod.apply_moe(cfg, lp["moe"], h2)
+                if cfg.post_block_norm:
+                    y = apply_norm(cfg, lp["post_ff_norm"], y)
+                h = h + y
+            elif "mlp" in lp:
+                h2 = apply_norm(cfg, lp["norm2"], h)
+                y = apply_mlp(cfg, lp["mlp"], h2)
+                if cfg.post_block_norm:
+                    y = apply_norm(cfg, lp["post_ff_norm"], y)
+                h = h + y
+            new_bc[f"layer_{i}"] = new_lc
+        return h, new_bc
+
+    x, new_cache = jax.lax.scan(block_fn, x, (params["blocks"], cache))
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x), new_cache
+
+
+def _decode_cross(cfg: ModelConfig, p: Params, x: jax.Array, lc: Params) -> jax.Array:
+    """Cross-attention for one decode token using precomputed enc K/V."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, 1, cfg.n_heads, hd)
+    if "bq" in p:
+        q = q + p["bq"].reshape(1, 1, cfg.n_heads, hd)
+    k = attn._expand_kv(cfg, lc["cross_k"])
+    v = attn._expand_kv(cfg, lc["cross_v"])
+    mask = jnp.ones((1, 1, 1, k.shape[1]), bool)
+    out = attn._attend(cfg, q, k, v, mask).reshape(b, 1, -1) @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,                 # int32[B, S]
+    embeds: Optional[jax.Array] = None,
+    max_len: Optional[int] = None,
+) -> Tuple[jax.Array, Params]:
+    """Process a prompt; return (last-position logits [B, V], filled cache).
+
+    The cache is sized ``max_len`` (>= S) so subsequent decode_steps append.
+    """
+    x = _embed(cfg, params, tokens)
+    enc = None
+    if cfg.n_enc_layers:
+        enc = _encode(cfg, params, embeds)
+    elif embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    ml = max_len or s
+    positions = jnp.arange(s)
+
+    def block_fn(carry, bp):
+        h = carry
+        caches: Params = {}
+        aux: Dict[str, jax.Array] = {}
+        for i in range(cfg.block_period):
+            lp = bp[f"layer_{i}"]
+            kind = cfg.layer_kind(i)
+            hn = apply_norm(cfg, lp["norm1"], h)
+            lcache: Params = {}
+            if kind == "attn":
+                qh, kh, vh = attn._project_qkv(cfg, lp["attn"], hn)
+                qh = attn.apply_rope(qh, positions, cfg.rope_theta)
+                kh = attn.apply_rope(kh, positions, cfg.rope_theta)
+                pad = ml - s
+                lcache["k"] = jnp.pad(kh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                lcache["v"] = jnp.pad(vh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                kf = attn._expand_kv(cfg, kh)
+                vf = attn._expand_kv(cfg, vh)
+                if s > cfg.attn_chunk_threshold:
+                    mix = attn._blockwise_causal(cfg, qh, kf, vf, cfg.layer_window(i))
+                else:
+                    mask = attn._causal_mask(s, s, jnp.int32(0), cfg.layer_window(i))
+                    mix = attn._attend(cfg, qh, kf, vf, mask)
+                mix = mix.reshape(b, s, -1) @ lp["attn"]["wo"]
+                if "bo" in lp["attn"]:
+                    mix = mix + lp["attn"]["bo"]
+            else:
+                mix, st = ssm_mod.ssm_forward(cfg, lp["ssm"], hn, return_state=True)
+                lcache.update(st)
+            if cfg.post_block_norm:
+                mix = apply_norm(cfg, lp["post_attn_norm"], mix)
+            if cfg.parallel_block and "mlp" in lp:
+                h = h + mix + apply_mlp(cfg, lp["mlp"], hn)
+                caches[f"layer_{i}"] = lcache
+                continue
+            h = h + mix
+            if enc is not None and "cross" in lp:
+                hc = apply_norm(cfg, lp["norm_cross"], h)
+                h = h + attn.cross_attention(cfg, lp["cross"], hc, enc)
+                hd = cfg.resolved_head_dim
+                ksrc = (enc @ lp["cross"]["wk"]).reshape(b, -1, cfg.n_kv_heads, hd)
+                vsrc = (enc @ lp["cross"]["wv"]).reshape(b, -1, cfg.n_kv_heads, hd)
+                if "bk" in lp["cross"]:
+                    ksrc = ksrc + lp["cross"]["bk"].reshape(1, 1, cfg.n_kv_heads, hd)
+                    vsrc = vsrc + lp["cross"]["bv"].reshape(1, 1, cfg.n_kv_heads, hd)
+                lcache["cross_k"] = ksrc
+                lcache["cross_v"] = vsrc
+            if "moe" in lp:
+                h2 = apply_norm(cfg, lp["norm2"], h)
+                y, moe_aux = moe_mod.apply_moe(cfg, lp["moe"], h2)
+                if cfg.post_block_norm:
+                    y = apply_norm(cfg, lp["post_ff_norm"], y)
+                h = h + y
+            elif "mlp" in lp:
+                h2 = apply_norm(cfg, lp["norm2"], h)
+                y = apply_mlp(cfg, lp["mlp"], h2)
+                if cfg.post_block_norm:
+                    y = apply_norm(cfg, lp["post_ff_norm"], y)
+                h = h + y
+            caches[f"layer_{i}"] = lcache
+        return h, caches
+
+    x, cache = jax.lax.scan(block_fn, x, params["blocks"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x[:, -1, :]), cache

@@ -1,0 +1,200 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = wire_bytes_per_chip / link_bw
+
+Sources: ``compiled.cost_analysis()`` (flops / bytes accessed -- these are
+*per-partition* numbers: the analyzed module is the post-SPMD local module)
+and the optimized HLO text for collectives.  cost_analysis is not collective
+aware, so wire bytes are derived per op from the (local) result shape with
+ring-algorithm factors:
+
+    all-reduce        2 x bytes          (reduce-scatter + all-gather phases)
+    all-gather        1 x bytes          (result is the gathered local copy)
+    reduce-scatter    (G-1) x bytes      (result is the scattered shard)
+    all-to-all        1 x bytes
+    collective-permute 1 x bytes
+
+Hardware constants: TPU v5e-class -- 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    result_bytes: Dict[str, int]
+    wire_bytes: int
+
+    def as_dict(self) -> Dict:
+        return {"counts": self.counts, "result_bytes": self.result_bytes,
+                "wire_bytes": self.wire_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum collective wire bytes (per device) from (local-shape) HLO text."""
+    counts: Dict[str, int] = {}
+    rbytes: Dict[str, int] = {}
+    wire = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str = m.group(1) or m.group(2)
+        op = m.group(3)
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        b = _shape_bytes(shape_str)
+        gsize = _group_size(line)
+        if op == "all-reduce":
+            wb = 2 * b * max(0, gsize - 1) // max(1, gsize)
+        elif op == "all-gather":
+            wb = b * max(0, gsize - 1) // max(1, gsize)
+        elif op == "reduce-scatter":
+            wb = b * max(0, gsize - 1)
+        else:  # all-to-all / collective-permute
+            wb = b
+        counts[op] = counts.get(op, 0) + 1
+        rbytes[op] = rbytes.get(op, 0) + b
+        wire += wb
+    return CollectiveStats(counts=counts, result_bytes=rbytes, wire_bytes=wire)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_ARR_RE.search(line)
+    if m:  # iota format replica_groups=[G,N] -> N per group
+        return int(m.group(2))
+    return 2
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    model_flops: float               # 6*N(_active)*D tokens (global)
+    collectives: Dict
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (chips * HLO flops): remat/redundancy waste."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Achievable fraction of peak: useful model FLOP-time over the
+        max of the three terms (what fraction of the bound is useful)."""
+        t_model = self.model_flops / self.chips / PEAK_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_model / t_bound if t_bound else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops_for(cfg, shape_kind: str, batch: int, seq: int) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode step), N = active.
+
+    Enc-dec models split the seq budget between the stacks (each sees s/2),
+    so the token count is halved to keep the useful-FLOPs ratio honest.
+    """
+    n = cfg.param_count()["active"]
+    if cfg.n_enc_layers:
+        seq = max(1, seq // 2)
+    if shape_kind == "train":
+        return 6.0 * n * batch * seq
+    if shape_kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch          # decode: one token per sequence
+
+
+def build_roofline(arch: str, shape: str, mesh_name: str, chips: int,
+                   cost: Dict, hlo_text: str, model_flops: float) -> Roofline:
+    coll = parse_collectives(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=float(cost.get("flops", 0.0)),
+        hbm_bytes_per_chip=float(cost.get("bytes accessed", 0.0)),
+        wire_bytes_per_chip=float(coll.wire_bytes),
+        model_flops=model_flops,
+        collectives=coll.as_dict(),
+    )

@@ -1,0 +1,37 @@
+"""KV/SSM cache utilities for the serving engine.
+
+The cache structures themselves are defined next to the layers that use
+them (attention.init_kv_cache, ssm.init_ssm_cache) and stacked per block by
+transformer.init_cache; this module adds serving-side helpers: sizing and
+trimming for slot reuse.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+PyTree = Any
+
+
+def cache_bytes(cache: PyTree) -> int:
+    """Total bytes held by a decode cache (capacity planning)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def new_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    enc_len = cfg.frontend_len if cfg.n_enc_layers else 0
+    return tfm.init_cache(cfg, batch, max_len, enc_len=enc_len)
+
+
+def reset_slots(cache: PyTree, slot_mask) -> PyTree:
+    """Zero the cache rows of finished slots (bool[B]) for reuse."""
+    def z(x):
+        if x.ndim >= 2 and x.shape[1] == slot_mask.shape[0]:
+            shape = (1, -1) + (1,) * (x.ndim - 2)
+            return x * (~slot_mask).reshape(shape).astype(x.dtype)
+        return x
+    return jax.tree.map(z, cache)

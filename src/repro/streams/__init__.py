@@ -1,0 +1,8 @@
+from repro.streams.synthetic import (  # noqa: F401
+    Stream,
+    ipv4_stream,
+    reinterpret_modularity,
+    telecom_stream,
+    zipf_graph_stream,
+)
+from repro.streams.stats import degree_stats, exact_marginals, observed_error  # noqa: F401

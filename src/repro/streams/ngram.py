@@ -1,0 +1,72 @@
+"""Token streams as modular-key streams (the LM-framework integration).
+
+A training corpus is the fastest stream a cluster sees.  An n-gram is a key
+of modularity n over the vocabulary domain -- a bigram ⟨prev, next⟩ is
+structurally a directed graph edge, the paper's flagship example.  These
+helpers turn token batches into (items, freqs) blocks consumable by the
+sketch runtime, so MOD-Sketch tracks corpus n-gram statistics *during
+training* with O(w*h) memory and exact psum mergeability across the mesh.
+
+Also here: (expert, token-bucket) pair extraction for MoE routing telemetry
+-- a modularity-2 key stream with strongly asymmetric marginals (few experts,
+many buckets), i.e. precisely the alpha != 1 regime Thm 3 optimizes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import KeySchema
+
+
+def ngram_schema(vocab_size: int, n: int) -> KeySchema:
+    return KeySchema(domains=(int(vocab_size),) * n)
+
+
+def ngram_items(tokens: jax.Array, n: int) -> jax.Array:
+    """uint32[B, T] token ids -> uint32[B*(T-n+1), n] n-gram keys.
+
+    jnp implementation so it runs inside the jitted train step; windows that
+    straddle sequence boundaries are excluded by construction (per-row
+    windows only).
+    """
+    if n < 1:
+        raise ValueError("n >= 1")
+    b, t = tokens.shape
+    if t < n:
+        raise ValueError(f"sequence length {t} < n {n}")
+    cols = [tokens[:, i : t - n + 1 + i] for i in range(n)]
+    grams = jnp.stack(cols, axis=-1)            # [B, T-n+1, n]
+    return grams.reshape(-1, n).astype(jnp.uint32)
+
+
+def ngram_items_np(tokens: np.ndarray, n: int) -> np.ndarray:
+    b, t = tokens.shape
+    cols = [tokens[:, i : t - n + 1 + i] for i in range(n)]
+    return np.stack(cols, axis=-1).reshape(-1, n).astype(np.uint32)
+
+
+def moe_routing_items(
+    token_ids: jax.Array,      # int32[N] flattened tokens
+    expert_ids: jax.Array,     # int32[N, top_k] chosen experts
+    n_buckets: int = 4096,
+) -> jax.Array:
+    """(expert, token-bucket) pairs: uint32[N*top_k, 2].
+
+    Token ids are bucketed (id mod n_buckets) to bound the second module's
+    domain; expert domain is tiny => alpha = O(expert,*)/O(*,bucket) >> 1,
+    so the Thm-3 optimizer allocates b >> a, exactly the asymmetric-range
+    case the paper motivates.
+    """
+    n, k = expert_ids.shape
+    tok = jnp.broadcast_to(token_ids[:, None], (n, k)).reshape(-1)
+    exp = expert_ids.reshape(-1)
+    bucket = (tok % jnp.int32(n_buckets)).astype(jnp.uint32)
+    return jnp.stack([exp.astype(jnp.uint32), bucket], axis=-1)
+
+
+def routing_schema(n_experts: int, n_buckets: int = 4096) -> KeySchema:
+    return KeySchema(domains=(int(n_experts), int(n_buckets)))

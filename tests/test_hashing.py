@@ -1,0 +1,86 @@
+"""Hash family: limb arithmetic vs uint64 oracle, range, independence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import (
+    P31,
+    KeySchema,
+    cw_hash,
+    cw_hash_np,
+    draw_hash_params_np,
+    mod_p31,
+    mulmod_p31_16,
+)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=200, deadline=None)
+def test_mod_p31_matches_int(x):
+    got = int(mod_p31(jnp.uint32(x)))
+    assert got == x % int(P31)
+
+
+@given(st.integers(0, int(P31) - 1), st.integers(0, 2**16 - 1))
+@settings(max_examples=200, deadline=None)
+def test_mulmod_matches_int(a, x):
+    got = int(mulmod_p31_16(jnp.uint32(a), jnp.uint32(x)))
+    assert got == (a * x) % int(P31)
+
+
+@given(st.integers(0, 2**63 - 1), st.integers(1, 12))
+@settings(max_examples=50, deadline=None)
+def test_cw_hash_limb_equals_uint64_oracle(seed, n_chunks):
+    rng = np.random.default_rng(seed % 2**32)
+    chunks = rng.integers(0, 1 << 16, size=(64, n_chunks)).astype(np.uint32)
+    q = draw_hash_params_np(rng, (n_chunks,))
+    r = int(draw_hash_params_np(rng, (1,))[0])
+    expect = cw_hash_np(chunks, q, r)
+    got = np.asarray(cw_hash(jnp.asarray(chunks), jnp.asarray(q), jnp.uint32(r)))
+    assert (expect == got).all()
+
+
+def test_hash_uniformity_and_independence():
+    """Pairwise collision rate over a range ~ 1/range (CW guarantee)."""
+    rng = np.random.default_rng(0)
+    n, h = 4000, 256
+    chunks = rng.integers(0, 1 << 16, size=(n, 2)).astype(np.uint32)
+    chunks = np.unique(chunks, axis=0)
+    rates = []
+    for trial in range(20):
+        q = draw_hash_params_np(rng, (2,))
+        r = int(draw_hash_params_np(rng, (1,))[0])
+        hv = cw_hash_np(chunks, q, r) % h
+        # collision count among random pairs
+        i = rng.integers(0, len(chunks), 4000)
+        j = rng.integers(0, len(chunks), 4000)
+        mask = i != j
+        rates.append(np.mean(hv[i[mask]] == hv[j[mask]]))
+    assert abs(np.mean(rates) - 1.0 / h) < 0.5 / h
+
+
+def test_schema_chunking_injective():
+    schema = KeySchema(domains=(1 << 32, 1000, 256))
+    assert schema.chunk_counts == (2, 1, 1)
+    assert schema.total_chunks == 4
+    rng = np.random.default_rng(1)
+    items = np.stack([
+        rng.integers(0, 1 << 32, 500, dtype=np.uint64).astype(np.uint32),
+        rng.integers(0, 1000, 500).astype(np.uint32),
+        rng.integers(0, 256, 500).astype(np.uint32),
+    ], axis=1)
+    chunks = schema.module_chunks_np(items)
+    # distinct items -> distinct chunk vectors
+    assert len(np.unique(chunks, axis=0)) == len(np.unique(items, axis=0))
+    # jnp path identical
+    got = np.asarray(schema.module_chunks(jnp.asarray(items)))
+    assert (got == chunks).all()
+
+
+def test_schema_validation():
+    with pytest.raises(ValueError):
+        KeySchema(domains=())
+    with pytest.raises(ValueError):
+        KeySchema(domains=(1,))

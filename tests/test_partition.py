@@ -1,0 +1,34 @@
+"""Thm 6 / Table I: Bell numbers and partition enumeration."""
+import pytest
+
+from repro.core.partition import all_partitions, bell_number, canonical
+
+# paper Table I, verbatim
+TABLE_I = {1: 1, 2: 2, 3: 5, 4: 15, 5: 52, 6: 203, 7: 877, 8: 4140,
+           9: 21147, 10: 115975, 11: 678570}
+
+
+def test_bell_numbers_match_table_1():
+    for n, t in TABLE_I.items():
+        assert bell_number(n) == t
+
+
+def test_bell_grows_faster_than_2n():
+    """Paper: for n > 4, T(n) > 2^n and diverges from it."""
+    for n in range(5, 12):
+        assert bell_number(n) > 2 ** n
+
+
+def test_enumeration_count_matches_bell():
+    for n in range(1, 7):
+        parts = list(all_partitions(range(n)))
+        assert len(parts) == bell_number(n)
+        assert len(set(parts)) == len(parts)          # no duplicates
+        for p in parts:
+            flat = sorted(m for g in p for m in g)
+            assert flat == list(range(n))             # exact cover
+
+
+def test_canonical_ordering():
+    assert canonical([[2, 0], [1]]) == ((0, 2), (1,))
+    assert canonical([(1,), (0, 2)]) == ((0, 2), (1,))

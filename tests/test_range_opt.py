@@ -1,0 +1,93 @@
+"""Thm 3 range optimization: paper Example 1, split formulas, recursion."""
+import numpy as np
+import pytest
+
+from repro.core.range_opt import (
+    aggregate_alpha,
+    aggregate_sample,
+    estimate_alpha,
+    marginal_per_item,
+    optimal_ranges_mod2,
+    recursive_ranges,
+    split_range,
+    weighted_median,
+)
+
+
+def test_paper_example_1_exact():
+    """Items (1,2):13, (1,3):5, (2,3):7 -> alpha_agg = 18/13 (SIV-A Ex. 1)."""
+    items = np.array([[1, 2], [1, 3], [2, 3]], dtype=np.uint32)
+    freqs = np.array([13, 5, 7], dtype=np.int64)
+    uniq, f = aggregate_sample(items, freqs)
+    m1 = marginal_per_item(uniq, f, [0])
+    m2 = marginal_per_item(uniq, f, [1])
+    alphas = {tuple(i): a for i, a in zip(uniq.tolist(), (m1 / m2).tolist())}
+    assert alphas[(1, 2)] == pytest.approx(18 / 13)
+    assert alphas[(1, 3)] == pytest.approx(18 / 12)
+    assert alphas[(2, 3)] == pytest.approx(7 / 12)
+    agg = estimate_alpha(items, freqs, [0], [1], agg="median")
+    assert agg == pytest.approx(18 / 13)
+
+
+def test_paper_split_example():
+    """h=360000, O(*,x2) = 2*O(x1,*) => beta=2 => a~848, b~424 (SIV-A)."""
+    a, b = split_range(360_000, 2.0)
+    assert abs(a - 849) <= 1 and abs(b - 424) <= 1
+    assert abs(a / b - 2.0) < 0.02
+    assert abs(a * b - 360_000) / 360_000 < 0.01
+
+
+def test_weighted_median():
+    v = np.array([7 / 12, 18 / 13, 18 / 12])
+    w = np.array([7.0, 13.0, 5.0])
+    assert weighted_median(v, w) == pytest.approx(18 / 13)
+
+
+def test_aggregates():
+    a = np.array([1.0, 2.0, 4.0])
+    f = np.array([1.0, 1.0, 1.0])
+    assert aggregate_alpha(a, f, "min") == 1.0
+    assert aggregate_alpha(a, f, "max") == 4.0
+    assert aggregate_alpha(a, f, "mean") == pytest.approx(7 / 3)
+    with pytest.raises(ValueError):
+        aggregate_alpha(a, f, "mode")
+
+
+def test_recursive_ranges_product_near_h():
+    rng = np.random.default_rng(0)
+    items = rng.integers(0, 256, size=(5000, 4)).astype(np.uint32)
+    freqs = rng.integers(1, 20, size=(5000,)).astype(np.int64)
+    for groups in ([[0], [1], [2], [3]], [[0, 1], [2], [3]], [[0, 2], [1, 3]]):
+        ranges = recursive_ranges(items, freqs, groups, 4096.0)
+        assert len(ranges) == len(groups)
+        prod = float(np.prod(ranges))
+        assert 0.4 * 4096 <= prod <= 2.5 * 4096
+        assert all(r >= 2 for r in ranges)
+
+
+def test_beta_direction_tracks_skew():
+    """Heavier first-module marginals (alpha > 1) must give a < b (Thm 3)."""
+    rng = np.random.default_rng(1)
+    # few sources, many targets: O(x1,*) large, alpha > 1 -> beta < 1 -> a < b
+    src = rng.integers(0, 20, size=20_000).astype(np.uint32)
+    tgt = rng.integers(0, 5000, size=20_000).astype(np.uint32)
+    items = np.stack([src, tgt], axis=1)
+    freqs = np.ones(20_000, dtype=np.int64)
+    a, b = optimal_ranges_mod2(items, freqs, 4096)
+    assert a < b
+    # flipped skew flips the ranges
+    a2, b2 = optimal_ranges_mod2(items[:, ::-1].copy(), freqs, 4096)
+    assert a2 > b2
+
+
+def test_beta_cache_reuse():
+    rng = np.random.default_rng(2)
+    items = rng.integers(0, 64, size=(2000, 3)).astype(np.uint32)
+    freqs = np.ones(2000, dtype=np.int64)
+    cache = {}
+    r1 = recursive_ranges(items, freqs, [[0], [1], [2]], 512.0, "median", cache)
+    n_entries = len(cache)
+    assert n_entries >= 1
+    r2 = recursive_ranges(items, freqs, [[0], [1], [2]], 512.0, "median", cache)
+    assert r1 == r2
+    assert len(cache) == n_entries          # all hits, nothing recomputed

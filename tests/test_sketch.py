@@ -1,0 +1,132 @@
+"""Sketch family invariants: overestimation, linearity, bounds (Thm 1/2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sketch as sk
+from repro.core.hashing import KeySchema
+
+
+def _true_freqs(items, freqs):
+    packed = items[:, 0].astype(np.uint64) << np.uint64(32) | items[:, 1]
+    uniq, inv = np.unique(packed, return_inverse=True)
+    return np.bincount(inv, weights=freqs.astype(np.float64))[inv]
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 3, 5]),
+       st.sampled_from([(256,), (16, 16), (4, 8, 8)]))
+@settings(max_examples=15, deadline=None)
+def test_never_underestimates(seed, w, ranges):
+    rng = np.random.default_rng(seed)
+    schema = KeySchema(domains=(1 << 32, 1 << 32))
+    part = [(0, 1)] if len(ranges) == 1 else (
+        [(0,), (1,)] if len(ranges) == 2 else [(0,), (1,), (0,)])
+    if len(ranges) == 3:  # partition must cover each module exactly once
+        part = [(0,), (1,)]
+        ranges = (ranges[0] * ranges[1], ranges[2])
+    spec = sk.mod_sketch_spec(schema, part, ranges, w)
+    items = rng.integers(0, 1 << 32, size=(300, 2), dtype=np.uint64).astype(np.uint32)
+    freqs = rng.integers(1, 50, size=(300,)).astype(np.int32)
+    st_ = sk.build_sketch(spec, jax.random.PRNGKey(seed % 997), items, freqs)
+    est = np.asarray(sk.query_jit(spec, st_, jnp.asarray(items)))
+    assert (est >= _true_freqs(items, freqs) - 1e-9).all()
+
+
+def test_count_min_equals_single_group_mod():
+    """CM is the m=1 point of the family: identical spec, identical table."""
+    schema = KeySchema(domains=(1 << 32, 1 << 32))
+    assert sk.count_min_spec(schema, 1024, 3) == sk.mod_sketch_spec(
+        schema, [(0, 1)], (1024,), 3)
+
+
+def test_merge_linearity_exact():
+    rng = np.random.default_rng(7)
+    schema = KeySchema(domains=(10_000, 10_000))
+    spec = sk.mod_sketch_spec(schema, [(0,), (1,)], (64, 64), 4)
+    key = jax.random.PRNGKey(0)
+    items = rng.integers(0, 10_000, size=(1000, 2)).astype(np.uint32)
+    freqs = rng.integers(1, 9, size=(1000,)).astype(np.int32)
+    a = sk.update_jit(spec, sk.init_state(spec, key), jnp.asarray(items[:500]),
+                      jnp.asarray(freqs[:500]))
+    b = sk.update_jit(spec, sk.init_state(spec, key), jnp.asarray(items[500:]),
+                      jnp.asarray(freqs[500:]))
+    ab = sk.update_jit(spec, sk.init_state(spec, key), jnp.asarray(items),
+                       jnp.asarray(freqs))
+    assert (np.asarray(sk.merge(a, b).table) == np.asarray(ab.table)).all()
+
+
+def test_thm1_error_bound_holds_statistically():
+    """Count-Min: est <= true + eps*L w.p. >= 1 - (1/(h*eps))^w (Thm 1)."""
+    rng = np.random.default_rng(3)
+    schema = KeySchema(domains=(1 << 20, 1 << 20))
+    h, w = 2048, 4
+    spec = sk.count_min_spec(schema, h, w)
+    items = rng.integers(0, 1 << 20, size=(20_000, 2), dtype=np.uint64).astype(np.uint32)
+    freqs = np.ones(20_000, dtype=np.int32)
+    state = sk.build_sketch(spec, jax.random.PRNGKey(5), items, freqs)
+    est = np.asarray(sk.query_jit(spec, state, jnp.asarray(items[:2000])))
+    true = _true_freqs(items, freqs)[:2000]
+    L = freqs.sum()
+    eps = 4.0 / h  # > e/h, so the bound probability is strong
+    viol = np.mean(est > true + eps * L)
+    assert viol <= (1.0 / (h * eps)) ** w + 0.01
+
+
+def test_conservative_update_tighter_but_still_overestimates():
+    rng = np.random.default_rng(11)
+    schema = KeySchema(domains=(4096, 4096))
+    spec = sk.mod_sketch_spec(schema, [(0,), (1,)], (32, 32), 3)
+    items = rng.integers(0, 4096, size=(2000, 2)).astype(np.uint32)
+    freqs = np.ones(2000, dtype=np.int32)
+    key = jax.random.PRNGKey(2)
+    plain = sk.update_jit(spec, sk.init_state(spec, key), jnp.asarray(items),
+                          jnp.asarray(freqs))
+    cons = sk.update_conservative(spec, sk.init_state(spec, key),
+                                  jnp.asarray(items), jnp.asarray(freqs))
+    true = _true_freqs(items, freqs)
+    e_plain = np.asarray(sk.query_jit(spec, plain, jnp.asarray(items)))
+    e_cons = np.asarray(sk.query(spec, cons, jnp.asarray(items)))
+    assert (e_cons >= true - 1e-9).all()
+    assert e_cons.sum() <= e_plain.sum()
+    assert (e_cons <= e_plain + 1e-9).all()
+
+
+def test_spec_validation():
+    schema = KeySchema(domains=(100, 100))
+    with pytest.raises(ValueError):
+        sk.SketchSpec(schema, ((0,),), (10,), 3)          # missing module
+    with pytest.raises(ValueError):
+        sk.SketchSpec(schema, ((0,), (1,), (0,)), (10, 10, 10), 3)  # dup
+    with pytest.raises(ValueError):
+        sk.SketchSpec(schema, ((0,), (1,)), (10,), 3)     # range arity
+
+
+def test_marginal_queries():
+    """Composite hashing answers subspace queries (gMatrix/TCM capability):
+    O(x1, *) = min over rows of the sum of cells sharing x1's sub-index."""
+    rng = np.random.default_rng(13)
+    schema = KeySchema(domains=(1 << 20, 1 << 20))
+    spec = sk.mod_sketch_spec(schema, [(0,), (1,)], (128, 64), 5)
+    src = rng.integers(0, 50, size=5000).astype(np.uint32) * 7919
+    tgt = rng.integers(0, 1 << 20, size=5000, dtype=np.int64).astype(np.uint32)
+    items = np.stack([src, tgt], axis=1)
+    freqs = rng.integers(1, 10, size=5000).astype(np.int32)
+    st = sk.build_sketch(spec, jax.random.PRNGKey(0), items, freqs)
+
+    uniq_src = np.unique(src)
+    est = np.asarray(sk.query_marginal(spec, st, 0,
+                                       jnp.asarray(uniq_src.reshape(-1, 1))))
+    true = np.array([freqs[src == s].sum() for s in uniq_src])
+    assert (est >= true - 1e-6).all()          # marginal overestimate
+    # ranking quality: estimates correlate strongly with true marginals
+    corr = np.corrcoef(est, true)[0, 1]
+    assert corr > 0.9, corr
+
+
+def test_strides_mixed_radix():
+    schema = KeySchema(domains=(100, 100, 100))
+    spec = sk.mod_sketch_spec(schema, [(0,), (1,), (2,)], (5, 7, 11), 2)
+    assert spec.strides == (77, 11, 1)
+    assert spec.table_size == 385

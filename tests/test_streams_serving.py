@@ -1,0 +1,108 @@
+"""Stream generators, sampling, n-gram extraction, serving engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import transformer as tfm
+from repro.serving.engine import Request, ServeConfig, ServeEngine, SlotScheduler
+from repro.streams import (
+    degree_stats,
+    ipv4_stream,
+    reinterpret_modularity,
+    telecom_stream,
+    zipf_graph_stream,
+)
+from repro.streams.ngram import moe_routing_items, ngram_items, ngram_items_np
+from repro.streams.sampling import BernoulliSampler, ReservoirSampler
+
+
+def test_stream_marginal_asymmetry_directions():
+    tw = zipf_graph_stream(n_src=2000, n_tgt=6000, n_edges=30_000,
+                           n_occurrences=200_000, seed=0)
+    st = degree_stats(tw.items, tw.freqs)
+    assert st["n_targets"] > st["n_sources"]          # Twitter-like (Table III)
+    ip = ipv4_stream(n_src_hosts=8000, n_tgt_hosts=800, n_pairs=30_000,
+                     n_occurrences=200_000, seed=0)
+    st2 = degree_stats(ip.items, ip.freqs)
+    assert st2["n_sources"] > st2["n_targets"]        # CAIDA-like
+
+
+def test_sample_is_uniform_thinning():
+    s = telecom_stream(n_users=2000, n_calls=20_000, seed=1)
+    rng = np.random.default_rng(0)
+    items, freqs = s.sample(0.05, rng)
+    assert freqs.sum() == pytest.approx(0.05 * s.total, rel=0.1)
+    assert (freqs >= 1).all()
+
+
+def test_reinterpret_modularity_preserves_mass():
+    base = ipv4_stream(n_src_hosts=500, n_tgt_hosts=100, n_pairs=3000,
+                       n_occurrences=30_000, seed=2)
+    for w in (4, 8):
+        v = reinterpret_modularity(base, w)
+        assert v.schema.modularity == w
+        assert v.total == base.total
+        assert len(v.items) == len(base.items)
+        assert (v.items < (1 << (64 // w))).all()
+
+
+def test_ngram_items():
+    toks = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.uint32)
+    bi = np.asarray(ngram_items(toks, 2))
+    assert bi.shape == (6, 2)
+    assert [1, 2] in bi.tolist() and [7, 8] in bi.tolist()
+    assert [4, 5] not in bi.tolist()                  # no cross-row windows
+    tri = ngram_items_np(np.asarray(toks), 3)
+    assert tri.shape == (4, 3)
+
+
+def test_moe_routing_items_schema():
+    toks = jnp.arange(10, dtype=jnp.int32)
+    experts = jnp.stack([jnp.zeros(10, jnp.int32), jnp.ones(10, jnp.int32)],
+                        axis=1)
+    items = np.asarray(moe_routing_items(toks, experts, n_buckets=8))
+    assert items.shape == (20, 2)
+    assert set(items[:, 0].tolist()) == {0, 1}
+    assert items[:, 1].max() < 8
+
+
+def test_samplers():
+    bs = BernoulliSampler(0.5, seed=0)
+    bs.offer(np.arange(1000, dtype=np.uint32).reshape(-1, 1))
+    items, freqs = bs.sample()
+    assert 300 < freqs.sum() < 700
+    rs = ReservoirSampler(100, seed=0)
+    rs.offer(np.arange(5000, dtype=np.uint32).reshape(-1, 1))
+    items, _ = rs.sample()
+    assert len(items) == 100
+
+
+def test_serve_engine_greedy_deterministic():
+    cfg = get_reduced("gemma-7b")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=48))
+    prompts = np.tile(np.arange(16, dtype=np.int32), (2, 1))
+    a = eng.generate(prompts, 8)
+    b = eng.generate(prompts, 8)
+    assert a.shape == (2, 8)
+    np.testing.assert_array_equal(a, b)
+    # identical prompts -> identical continuations
+    np.testing.assert_array_equal(a[0], a[1])
+
+
+def test_slot_scheduler_completes_all():
+    cfg = get_reduced("starcoder2-7b")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=40))
+    sched = SlotScheduler(eng, n_slots=3)
+    rng = np.random.default_rng(0)
+    for rid in range(7):
+        sched.submit(Request(rid=rid,
+                             prompt=rng.integers(0, cfg.vocab_size, 12,
+                                                 ).astype(np.int32),
+                             max_new=5))
+    done = sched.run()
+    assert len(done) == 7
+    assert all(len(r.out) == 5 for r in done)
