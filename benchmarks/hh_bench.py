@@ -1,0 +1,73 @@
+"""Heavy-hitter subsystem benchmark.
+
+    PYTHONPATH=src python benchmarks/hh_bench.py
+
+Measures, on the zipf edge workload:
+
+  * hierarchy build cost vs the flat base sketch (the per-level overhead),
+  * find_heavy_hitters descent vs brute force (query every distinct key at
+    the leaf level) -- the pruning win grows with the candidate universe,
+  * the Pallas candidate kernel vs the jnp gather reference on one descent
+    level (interpret mode on CPU; on TPU set interpret=False for real
+    numbers).
+
+Emits the common CSV rows (name, us_per_call, derived).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import hierarchy as hh
+from repro.core import sketch as sk
+from repro.streams import zipf_hh_workload
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    wl = zipf_hh_workload(n_occurrences=200_000, n_edges=20_000, seed=0)
+    stream = wl.stream
+    base = sk.mod_sketch_spec(stream.schema, [(0,), (1,)], (512, 512), 4)
+    hspec = hh.HierarchySpec.from_spec(base)
+    cands = wl.candidates(base)
+
+    us, state = timed(hh.build_hierarchy, hspec, key, stream.items,
+                      stream.freqs, repeat=1)
+    emit("hh/build_hierarchy", us, f"levels={hspec.n_levels}")
+    us_flat, flat = timed(sk.build_sketch, base, key, stream.items,
+                          stream.freqs, repeat=1)
+    emit("hh/build_flat_base", us_flat, f"overhead={us / max(us_flat, 1):.2f}x")
+
+    us, (items, est) = timed(hh.find_heavy_hitters, hspec, state,
+                             wl.threshold, cands, repeat=1)
+    exact = {tuple(r) for r in wl.exact_items.tolist()}
+    got = {tuple(r) for r in items.tolist()}
+    emit("hh/descent", us,
+         f"reported={len(got)};false_neg={len(exact - got)}")
+
+    # brute force: query every distinct key against the flat sketch
+    def brute():
+        q = sk.query_jit(base, flat, jnp.asarray(stream.items))
+        q = np.asarray(q)
+        keep = q >= wl.threshold
+        return stream.items[keep], q[keep]
+
+    us_bf, (bf_items, _) = timed(brute, repeat=1)
+    emit("hh/brute_force", us_bf,
+         f"distinct={len(stream.items)};brute/descent={us_bf / max(us, 1):.2f}x")
+
+    # kernel vs reference on one representative descent level.  NOTE: on CPU
+    # the Pallas path runs in interpret mode (Python per grid step) and is
+    # orders of magnitude slower than the jnp reference; the row exists to
+    # track the TPU number (interpret=False), not to be read on CPU.
+    prefixes = np.unique(stream.items[:, 0])[:64][:, None]
+    values = np.unique(stream.items[:, 1])[:128][:, None]
+    for use_kernel, name, rep in ((False, "hh/cand_query_ref", 3),
+                                  (True, "hh/cand_query_pallas", 1)):
+        us, grid = timed(hh.candidate_estimates, hspec, state, 1,
+                         prefixes, values, use_kernel=use_kernel, repeat=rep)
+        emit(name, us, f"grid={grid.shape[0]}x{grid.shape[1]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The runtime targets the modern ``jax.shard_map`` entry point; older
+installs (<= 0.4.x, like this container's 0.4.37) only ship
+``jax.experimental.shard_map`` whose replication check is spelled
+``check_rep``.  Route every call through :func:`shard_map` so both work.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import sketch as sk
 
 
@@ -49,7 +50,7 @@ def sharded_build(
         state = sk.update(spec, state, items_l, freqs_l)
         return jax.lax.psum(state.table, data_axes)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fold,
         mesh=mesh,
         in_specs=(P(data_axes), P(data_axes)),
@@ -95,7 +96,7 @@ def lazy_local_update(
         st = sk.update(spec, st, items_l, freqs_l)
         return st.table[None]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         fold,
         mesh=mesh,
         in_specs=(P(data_axes), P(data_axes), P(data_axes)),
@@ -113,7 +114,7 @@ def merge_local_tables(
     def m(tbl_l):
         return jax.lax.psum(tbl_l[0], data_axes)[None]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         m, mesh=mesh, in_specs=(P(data_axes),), out_specs=P(data_axes),
         check_vma=False,
     )
@@ -145,7 +146,7 @@ def row_sharded_query(
         vals = jnp.take_along_axis(table_l, idx.astype(jnp.int32), axis=1)
         return jax.lax.pmin(jnp.min(vals, axis=0), model_axis)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         q,
         mesh=mesh,
         in_specs=(

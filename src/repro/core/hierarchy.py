@@ -1,0 +1,348 @@
+"""Hierarchical heavy-hitter sketches over composite-hash prefixes.
+
+The composite-hash family (core/sketch.py) factors a key's cell address into
+per-group sub-indices with mixed-radix strides.  That factorization induces a
+natural *prefix hierarchy*: level L sketches the key restricted to module
+groups 0..L of the partition, coarsening one group per level.  Because the
+frequency of a prefix upper-bounds the frequency of every full key extending
+it, a Count-Min estimate at level L that falls below a threshold prunes the
+whole subtree -- the classic hierarchical heavy-hitter recursion (Cormode's
+dyadic CM / hierarchical count-sketch), lifted from bit prefixes to the
+paper's module-group prefixes.
+
+    level 0 : sketch of group g_1                (coarsest marginal)
+    level L : sketch of groups g_1..g_{L+1}
+    level m-1: sketch of the full composite key  (== the base SketchSpec)
+
+``find_heavy_hitters(threshold)`` descends the hierarchy: at each level it
+extends the surviving prefixes by every candidate value of the next group,
+estimates all children in one batched query, and keeps those >= threshold.
+Overestimation (CM) + prefix monotonicity give *no false negatives* for any
+key whose group values appear in the candidate sets; false positives are
+bounded by the per-level CM overestimate.
+
+Every level's table is linear in the stream, so a hierarchy merges cell-wise
+per level and composes with the distributed runtime (core/distributed.py)
+exactly like a single sketch: see :func:`merge` and
+:func:`sharded_hierarchy_build`.
+
+The candidate-extension query is the hot path (P prefixes x C child values
+per step).  The mixed radix makes it separable: within level L,
+
+    idx(prefix, v) = idx_prefix * r_L  +  H_L(v)        (stride of g_L is 1)
+
+so the batched query needs only P prefix partial indices and C child partial
+indices per row, combined on the fly.  The Pallas path
+(kernels/hier_query.py) evaluates the full P x C grid in one launch;
+:func:`candidate_partials` computes the two factors for it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.core.hashing import KeySchema
+
+
+# --------------------------------------------------------------------------
+# Spec
+# --------------------------------------------------------------------------
+
+def level_modules(base: sk.SketchSpec, level: int) -> Tuple[int, ...]:
+    """Module indices (into the base schema) covered by levels 0..level,
+    ordered group-major -- the column order of level items."""
+    return tuple(m for g in base.partition[: level + 1] for m in g)
+
+
+def level_spec(base: sk.SketchSpec, level: int) -> sk.SketchSpec:
+    """The SketchSpec of one hierarchy level: groups 0..level of the base,
+    with modules renumbered consecutively in group-major order."""
+    mods = level_modules(base, level)
+    schema = KeySchema(domains=tuple(base.schema.domains[m] for m in mods))
+    part: List[Tuple[int, ...]] = []
+    pos = 0
+    for g in base.partition[: level + 1]:
+        part.append(tuple(range(pos, pos + len(g))))
+        pos += len(g)
+    return sk.SketchSpec(schema, tuple(part), base.ranges[: level + 1],
+                         base.width)
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchySpec:
+    """A stack of composite-hash sketches over successive group prefixes."""
+    base: sk.SketchSpec
+    levels: Tuple[sk.SketchSpec, ...]
+
+    @staticmethod
+    def from_spec(base: sk.SketchSpec) -> "HierarchySpec":
+        return HierarchySpec(
+            base=base,
+            levels=tuple(level_spec(base, l) for l in range(base.n_groups)),
+        )
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    @property
+    def table_cells(self) -> int:
+        """Total cells across all levels (memory overhead vs the base:
+        sum_L prod(r_1..r_L) <= h * r/(r-1) for geometric ranges)."""
+        return sum(s.width * s.table_size for s in self.levels)
+
+    def level_items(self, level: int, items: np.ndarray | jax.Array):
+        """Select/reorder full-key columns into level ``level``'s layout."""
+        cols = list(level_modules(self.base, level))
+        return items[:, cols]
+
+    def to_schema_order(self, items: np.ndarray) -> np.ndarray:
+        """Group-major full-key columns -> original schema module order."""
+        mods = level_modules(self.base, self.n_levels - 1)
+        out = np.empty_like(items)
+        for pos, m in enumerate(mods):
+            out[:, m] = items[:, pos]
+        return out
+
+
+class HierarchyState(NamedTuple):
+    states: Tuple[sk.SketchState, ...]   # one per level, coarse -> fine
+
+
+def init_hierarchy(hspec: HierarchySpec, key: jax.Array,
+                   dtype=jnp.int32) -> HierarchyState:
+    keys = jax.random.split(key, hspec.n_levels)
+    return HierarchyState(states=tuple(
+        sk.init_state(s, k, dtype=dtype) for s, k in zip(hspec.levels, keys)
+    ))
+
+
+# --------------------------------------------------------------------------
+# Stream ops (linear => mergeable)
+# --------------------------------------------------------------------------
+
+def update(hspec: HierarchySpec, state: HierarchyState,
+           items: jax.Array, freqs: jax.Array) -> HierarchyState:
+    """Fold a block of full keys into every level (items: uint32[B, n])."""
+    items = jnp.asarray(items)
+    new = []
+    for lvl, (spec_l, st_l) in enumerate(zip(hspec.levels, state.states)):
+        new.append(sk.update(spec_l, st_l, hspec.level_items(lvl, items),
+                             freqs))
+    return HierarchyState(states=tuple(new))
+
+
+def merge(a: HierarchyState, b: HierarchyState) -> HierarchyState:
+    """Cell-wise merge per level -- exact by linearity, same contract as
+    core.sketch.merge, so hierarchies shard/merge like single sketches."""
+    return HierarchyState(states=tuple(
+        sk.merge(sa, sb) for sa, sb in zip(a.states, b.states)))
+
+
+def build_hierarchy(hspec: HierarchySpec, key: jax.Array,
+                    items: np.ndarray, freqs: np.ndarray,
+                    block: int = 1 << 17, dtype=jnp.int32) -> HierarchyState:
+    """Build all levels over a (possibly large) weighted stream, in blocks."""
+    state = init_hierarchy(hspec, key, dtype=dtype)
+    for blk_items, blk_freqs in sk.stream_blocks(items, freqs, block):
+        state = update_jit(hspec, state, blk_items, blk_freqs)
+    return state
+
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def update_jit(hspec: HierarchySpec, state: HierarchyState,
+               items, freqs) -> HierarchyState:
+    return update(hspec, state, items, freqs)
+
+
+def sharded_hierarchy_build(
+    hspec: HierarchySpec,
+    state: HierarchyState,
+    mesh,
+    data_axes: Tuple[str, ...],
+    items: jax.Array,
+    freqs: jax.Array,
+) -> HierarchyState:
+    """Distributed build: per-level sharded fold + psum merge (exact).
+
+    Reuses core.distributed.sharded_build level by level; every level's
+    table is linear, so the psum merge is exact just like the flat case.
+    """
+    from repro.core import distributed as dist
+
+    items = jnp.asarray(items)
+    new = []
+    for lvl, (spec_l, st_l) in enumerate(zip(hspec.levels, state.states)):
+        delta = dist.sharded_build(
+            spec_l, st_l.params, mesh, data_axes,
+            hspec.level_items(lvl, items),
+            freqs, table_dtype=st_l.table.dtype)
+        new.append(sk.SketchState(params=st_l.params,
+                                  table=st_l.table + delta))
+    return HierarchyState(states=tuple(new))
+
+
+# --------------------------------------------------------------------------
+# Separable candidate queries
+# --------------------------------------------------------------------------
+
+def candidate_partials(
+    hspec: HierarchySpec,
+    state: HierarchyState,
+    level: int,
+    prefixes: jax.Array,     # uint32[P, n_prefix_modules] (group-major)
+    values: jax.Array,       # uint32[C, len(level group modules)]
+) -> Tuple[jax.Array, jax.Array]:
+    """The two factors of the level-``level`` child cell index.
+
+    Returns (pp, cp): uint32[w, P] prefix partials (already scaled by the
+    last group's range) and uint32[w, C] child partials, such that the cell
+    index of child (p, c) at row k is ``pp[k, p] + cp[k, c]`` -- exactly
+    ``compute_indices`` of the level spec on the concatenated key, by the
+    mixed-radix stride identity stride_j(level) = stride_j(level-1) * r_L.
+    """
+    spec_l = hspec.levels[level]
+    params = state.states[level].params
+    w = spec_l.width
+    r_last = spec_l.ranges[-1]
+
+    if level == 0:
+        pp = jnp.zeros((w, prefixes.shape[0]), jnp.uint32)
+    else:
+        prefix_spec = level_spec(hspec.base, level - 1)
+        n_pc = prefix_spec.schema.total_chunks
+        prefix_params = sk.SketchParams(q=params.q[:, :n_pc],
+                                        r=params.r[:, :level])
+        pp = sk.compute_indices(prefix_spec, prefix_params, prefixes)
+        pp = pp * jnp.uint32(r_last)
+
+    # child partial: the last group's sub-index, stride 1
+    cp = sk.group_subindex(spec_l, params, level, values)
+    return pp, cp
+
+
+def candidate_estimates(
+    hspec: HierarchySpec,
+    state: HierarchyState,
+    level: int,
+    prefixes: np.ndarray,    # uint32[P, n_prefix_modules]
+    values: np.ndarray,      # uint32[C, len(level group modules)]
+    *,
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
+    tile_h: int = 512,
+    max_batch: Optional[int] = None,
+) -> np.ndarray:
+    """CM estimates for every (prefix x candidate-value) child: [P, C].
+
+    ``use_kernel=True`` routes through the Pallas one-launch grid kernel
+    (kernels/hier_query.py); the default is the jnp gather reference.  Both
+    agree bit-for-bit on int32 tables.  The kernel's two-limb gather only
+    covers int32, so other table dtypes (int64 hierarchies) always take
+    the dtype-preserving reference path.
+
+    ``max_batch`` bounds the per-call P*C working set: the partial hashes
+    are computed ONCE for all prefixes and candidates, then only the
+    prefix axis is chunked (the child partials are identical across
+    chunks, so rehashing them per chunk would be pure waste).
+    """
+    prefixes = jnp.asarray(np.asarray(prefixes, dtype=np.uint32))
+    values = jnp.asarray(np.asarray(values, dtype=np.uint32))
+    pp, cp = candidate_partials(hspec, state, level, prefixes, values)
+    table = state.states[level].table
+    from repro.kernels.hier_query import (
+        hier_candidate_query,
+        hier_candidate_query_ref,
+    )
+    if use_kernel and table.dtype == jnp.int32:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        def one(pp_chunk):
+            return hier_candidate_query(table, pp_chunk, cp, tile_h=tile_h,
+                                        interpret=interpret)
+    else:
+        def one(pp_chunk):
+            return hier_candidate_query_ref(table, pp_chunk, cp)
+
+    p, c = pp.shape[1], cp.shape[1]
+    if max_batch is None or p * c <= max_batch:
+        return np.asarray(one(pp))
+    p_chunk = max(1, max_batch // max(c, 1))
+    outs = []
+    for s in range(0, p, p_chunk):
+        pc = pp[:, s : s + p_chunk]
+        if pc.shape[1] < p_chunk:
+            # pad to the fixed chunk width so one compiled kernel serves
+            # every chunk (pad index 0 is always a valid cell; sliced off)
+            pc = jnp.pad(pc, ((0, 0), (0, p_chunk - pc.shape[1])))
+        outs.append(np.asarray(one(pc)))
+    return np.concatenate(outs, axis=0)[:p]
+
+
+# --------------------------------------------------------------------------
+# Heavy-hitter descent
+# --------------------------------------------------------------------------
+
+def find_heavy_hitters(
+    hspec: HierarchySpec,
+    state: HierarchyState,
+    threshold: float,
+    candidates: Sequence[np.ndarray],
+    *,
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
+    max_batch: int = 1 << 16,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """All keys whose CM estimate is >= ``threshold``.
+
+    candidates[j]: uint32[C_j, len(g_j modules)] -- the value combos to
+    consider for group j (e.g. the distinct observed values; see
+    streams.heavy_hitters.group_candidates).  Guarantees, conditional on
+    every true heavy hitter's group values appearing in the candidate sets:
+
+      * no false negatives: estimates only overestimate, and a prefix's
+        mass >= any extension's, so no ancestor of a heavy key is pruned;
+      * false positives only from CM collisions at the leaf level, i.e.
+        every reported key has true frequency >= threshold - eps*L with the
+        usual (h, w) probability.
+
+    Returns (items uint32[K, n_modules] in schema module order, estimates
+    int64[K]) sorted by estimate, descending.
+    """
+    if len(candidates) != hspec.n_levels:
+        raise ValueError(
+            f"need one candidate set per level ({hspec.n_levels}), "
+            f"got {len(candidates)}")
+    threshold = int(threshold)
+
+    prefixes = np.zeros((1, 0), dtype=np.uint32)
+    est = np.zeros((1,), dtype=np.int64)
+    for lvl in range(hspec.n_levels):
+        cand = np.asarray(candidates[lvl], dtype=np.uint32)
+        if cand.ndim != 2 or cand.shape[1] != len(hspec.base.partition[lvl]):
+            raise ValueError(
+                f"candidates[{lvl}] must be [C, {len(hspec.base.partition[lvl])}]")
+        if prefixes.shape[0] == 0 or cand.shape[0] == 0:
+            n_mods = len(level_modules(hspec.base, hspec.n_levels - 1))
+            return (np.zeros((0, n_mods), np.uint32),
+                    np.zeros((0,), np.int64))
+        # batched P x C estimates; candidate_estimates hashes the partials
+        # once and chunks the prefix axis to bound the one-hot working set
+        grid = candidate_estimates(
+            hspec, state, lvl, prefixes, cand, use_kernel=use_kernel,
+            interpret=interpret, max_batch=max_batch).astype(np.int64)
+        keep_p, keep_c = np.nonzero(grid >= threshold)
+        prefixes = np.concatenate(
+            [prefixes[keep_p], cand[keep_c]], axis=1)
+        est = grid[keep_p, keep_c]
+
+    order = np.argsort(-est, kind="stable")
+    return hspec.to_schema_order(prefixes[order]), est[order]

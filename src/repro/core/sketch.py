@@ -30,9 +30,11 @@ import numpy as np
 from repro.core.hashing import (
     P31,
     KeySchema,
+    addmod_p31,
     cw_hash,
     cw_hash_np,
     draw_hash_params,
+    mulmod_p31_16,
 )
 
 
@@ -175,7 +177,6 @@ def compute_indices(spec: SketchSpec, params: SketchParams, items: jax.Array) ->
         acc = jnp.broadcast_to(params.r[:, j][:, None], (w, chunks.shape[0]))
         acc = acc.astype(jnp.uint32)
         for ci, c in enumerate(cols):
-            from repro.core.hashing import addmod_p31, mulmod_p31_16
             acc = addmod_p31(acc, mulmod_p31_16(params.q[:, c][:, None], gchunks[None, :, ci]))
         hj = acc % jnp.uint32(rng_j)
         idx = idx + hj * jnp.uint32(stride_j)
@@ -249,6 +250,32 @@ def merge(a: SketchState, b: SketchState) -> SketchState:
     return SketchState(params=a.params, table=a.table + b.table)
 
 
+def group_subindex(spec: SketchSpec, params: SketchParams, group: int,
+                   values: jax.Array) -> jax.Array:
+    """Sub-index of ``values`` within ``group``'s hash range: uint32[w, Q].
+
+    ``values``: uint32[Q, len(group modules)] module values for the group.
+    This is the per-group factor of the mixed-radix cell address; both the
+    marginal query below and the hierarchy's separable candidate queries
+    (core/hierarchy.py) are built from it.
+    """
+    vcols = []
+    for mi, mod in enumerate(spec.partition[group]):
+        nc = spec.schema.chunk_counts[mod]
+        v = values[..., mi].astype(jnp.uint32)
+        for c in range(nc):
+            vcols.append((v >> jnp.uint32(16 * c)) & jnp.uint32(0xFFFF))
+    gchunks = jnp.stack(vcols, axis=-1)                       # [Q, Cg]
+
+    w = spec.width
+    acc = jnp.broadcast_to(params.r[:, group][:, None],
+                           (w, values.shape[0])).astype(jnp.uint32)
+    for ci, c in enumerate(spec.group_chunk_columns(group)):
+        acc = addmod_p31(acc, mulmod_p31_16(params.q[:, c][:, None],
+                                            gchunks[None, :, ci]))
+    return acc % jnp.uint32(spec.ranges[group])
+
+
 def query_marginal(spec: SketchSpec, state: SketchState, group: int,
                    values: jax.Array) -> jax.Array:
     """Subspace query: estimate O(*,..,value,..,*) -- the total frequency of
@@ -262,26 +289,9 @@ def query_marginal(spec: SketchSpec, state: SketchState, group: int,
     would have to enumerate every key.  ``values``: uint32[Q, len(group
     modules)] module values for the queried group.
     """
-    chunks_full = jnp.zeros((values.shape[0], spec.schema.total_chunks),
-                            jnp.uint32)
-    cols = spec.group_chunk_columns(group)
-    # chunk the queried group's modules into their columns
-    vcols = []
-    for mi, mod in enumerate(spec.partition[group]):
-        nc = spec.schema.chunk_counts[mod]
-        v = values[..., mi].astype(jnp.uint32)
-        for c in range(nc):
-            vcols.append((v >> jnp.uint32(16 * c)) & jnp.uint32(0xFFFF))
-    gchunks = jnp.stack(vcols, axis=-1)                       # [Q, Cg]
-
     w = spec.width
-    from repro.core.hashing import addmod_p31, mulmod_p31_16
-    acc = jnp.broadcast_to(state.params.r[:, group][:, None],
-                           (w, values.shape[0])).astype(jnp.uint32)
-    for ci, c in enumerate(cols):
-        acc = addmod_p31(acc, mulmod_p31_16(state.params.q[:, c][:, None],
-                                            gchunks[None, :, ci]))
-    sub_idx = (acc % jnp.uint32(spec.ranges[group])).astype(jnp.int32)  # [w,Q]
+    sub_idx = group_subindex(spec, state.params, group,
+                             values).astype(jnp.int32)         # [w, Q]
 
     # sum the cells sharing this sub-index: reshape the row into the mixed-
     # radix grid, reduce every axis except this group's
@@ -314,6 +324,28 @@ def query_jit(spec: SketchSpec, state: SketchState, items) -> jax.Array:
     return query(spec, state, items)
 
 
+def stream_blocks(items, freqs, block: int):
+    """Yield a weighted stream as fixed-size jnp blocks.
+
+    Short tails are zero-padded (zero-frequency items are no-ops under
+    ``update``) so a single compiled update serves the whole stream.  This
+    is the one block/pad loop shared by every streaming build
+    (:func:`build_sketch`, hierarchy.build_hierarchy).
+    """
+    items = np.asarray(items, dtype=np.uint32)
+    freqs = np.asarray(freqs)
+    n = items.shape[0]
+    for s in range(0, n, block):
+        e = min(n, s + block)
+        blk_items = items[s:e]
+        blk_freqs = freqs[s:e]
+        if e - s < block and n > block:
+            pad = block - (e - s)
+            blk_items = np.pad(blk_items, ((0, pad), (0, 0)))
+            blk_freqs = np.pad(blk_freqs, (0, pad))
+        yield jnp.asarray(blk_items), jnp.asarray(blk_freqs)
+
+
 def build_sketch(
     spec: SketchSpec,
     key: jax.Array,
@@ -324,16 +356,6 @@ def build_sketch(
 ) -> SketchState:
     """Build a sketch over a (possibly large) weighted stream, in blocks."""
     state = init_state(spec, key, dtype=dtype)
-    n = int(np.asarray(items).shape[0])
-    items = np.asarray(items, dtype=np.uint32)
-    freqs = np.asarray(freqs)
-    for s in range(0, n, block):
-        e = min(n, s + block)
-        blk_items = items[s:e]
-        blk_freqs = freqs[s:e]
-        if e - s < block and n > block:
-            pad = block - (e - s)
-            blk_items = np.pad(blk_items, ((0, pad), (0, 0)))
-            blk_freqs = np.pad(blk_freqs, (0, pad))
-        state = update_jit(spec, state, jnp.asarray(blk_items), jnp.asarray(blk_freqs))
+    for blk_items, blk_freqs in stream_blocks(items, freqs, block):
+        state = update_jit(spec, state, blk_items, blk_freqs)
     return state

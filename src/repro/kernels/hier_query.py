@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: all candidate children of heavy prefixes in one launch.
+
+The hierarchical heavy-hitter descent (core/hierarchy.py) expands P
+surviving prefixes by C candidate values of the next module group and needs
+a Count-Min estimate for every child.  The mixed-radix cell address is
+separable -- ``idx(p, c) = pp[k, p] + cp[k, c]`` per row k, with the prefix
+partial pre-scaled by the last group's range and the child partial's stride
+equal to 1 -- so the kernel takes the two partial-index factors and
+evaluates the full P x C grid without ever materializing the P*C key
+matrix or rehashing anything in-kernel.
+
+Per (row k, range tile t): form the child indices for the whole grid,
+one-hot them against the tile's lanes, and gather via an MXU contraction
+exactly like kernels/sketch_query.py -- table values split into two 16-bit
+limbs so the f32 matmuls are exact for int32 counts.  The (w, P*C) per-row
+estimates accumulate across tiles by output revisiting; the final Count-Min
+min over the w rows is a VPU reduce fused into the jit'd wrapper.
+
+Grid = (w, h_pad / TILE_H); one launch per descent level.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hier_kernel(tile_h: int, pp_ref, cp_ref, tlo_ref, thi_ref, out_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pp = pp_ref[0]                                            # int32[P]
+    cp = cp_ref[0]                                            # int32[C]
+    p, c = pp.shape[0], cp.shape[0]
+    idx = (pp[:, None] + cp[None, :]).reshape(p * c)          # int32[P*C]
+    local = idx - t * tile_h
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (p * c, tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)    # [P*C, TH]
+    glo = jnp.dot(onehot, tlo_ref[0][:, None],
+                  preferred_element_type=jnp.float32)         # [P*C, 1]
+    ghi = jnp.dot(onehot, thi_ref[0][:, None],
+                  preferred_element_type=jnp.float32)
+    val = glo.astype(jnp.int32) + (ghi.astype(jnp.int32) << 16)
+    out_ref[...] = out_ref[...] + val[:, 0][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_h", "interpret"))
+def hier_candidate_query(
+    table: jax.Array,   # int32[w, h] (padded internally to tile_h)
+    pp: jax.Array,      # uint32[w, P] prefix partial indices (pre-scaled)
+    cp: jax.Array,      # uint32[w, C] child partial indices (stride 1)
+    *,
+    tile_h: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Count-Min estimates for every (prefix, candidate) child: int32[P, C].
+
+    The two-limb gather assumes cell counts fit int32; other table dtypes
+    must take :func:`hier_candidate_query_ref`.
+    """
+    if table.dtype != jnp.int32:
+        raise ValueError(
+            f"hier_candidate_query supports int32 tables only (got "
+            f"{table.dtype}); use hier_candidate_query_ref")
+    w, h = table.shape
+    h_pad = ((h + tile_h - 1) // tile_h) * tile_h
+    if h_pad != h:
+        # padding cells are zero and no child index reaches them (< h)
+        table = jnp.pad(table, ((0, 0), (0, h_pad - h)))
+    n_tiles = h_pad // tile_h
+    p = pp.shape[1]
+    c = cp.shape[1]
+    grid = (w, n_tiles)
+
+    ti = table.astype(jnp.int32)
+    tlo = (ti & jnp.int32(0xFFFF)).astype(jnp.float32)
+    thi = ((ti >> 16) & jnp.int32(0xFFFF)).astype(jnp.float32)
+
+    per_row = pl.pallas_call(
+        functools.partial(_hier_kernel, tile_h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, p), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, c), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, tile_h), lambda k, t: (k, t)),
+            pl.BlockSpec((1, tile_h), lambda k, t: (k, t)),
+        ],
+        out_specs=pl.BlockSpec((1, p * c), lambda k, t: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, p * c), jnp.int32),
+        interpret=interpret,
+    )(pp.astype(jnp.int32), cp.astype(jnp.int32), tlo, thi)
+    return jnp.min(per_row, axis=0).reshape(p, c)
+
+
+@jax.jit
+def hier_candidate_query_ref(table: jax.Array, pp: jax.Array,
+                             cp: jax.Array) -> jax.Array:
+    """Pure-jnp oracle: same signature minus tiling, [P, C] in the table's
+    dtype (unlike the kernel it is exact for int64 / float tables too)."""
+    w = table.shape[0]
+    idx = (pp.astype(jnp.int32)[:, :, None]
+           + cp.astype(jnp.int32)[:, None, :]).reshape(w, -1)
+    vals = jnp.take_along_axis(table, idx, axis=1)
+    return jnp.min(vals, axis=0).reshape(pp.shape[1], cp.shape[1])

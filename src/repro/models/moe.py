@@ -18,6 +18,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models.layers import dense_init
 from repro.models.shard_ctx import DP, MP, constrain
@@ -276,7 +277,7 @@ def _shardmap_dispatch(cfg: ModelConfig, p, x: jax.Array):
     w_spec = P(None, dp, "model")
     wo_spec = P(None, "model", dp)
     args = [p["router"], p.get("w_gate", p["w_in"]), p["w_in"], p["w_out"], x]
-    out, lb, drop = jax.shard_map(
+    out, lb, drop = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(None, None), w_spec, w_spec, wo_spec, P(dp, None, None)),

@@ -116,3 +116,135 @@ class SlotScheduler:
                 r.done = True
                 self.completed.append(r)
         return self.completed
+
+
+# --------------------------------------------------------------------------
+# streaming top-k endpoint (hierarchical heavy-hitter sketch)
+# --------------------------------------------------------------------------
+
+class SketchTopKEndpoint:
+    """Serving endpoint for streaming heavy-hitter / top-k queries.
+
+    Ingests weighted key blocks (telemetry: routed-token pairs, request
+    n-grams, edge events) into a hierarchical composite-hash sketch
+    (core/hierarchy.py) and answers
+
+      * ``heavy_hitters(threshold)`` -- every key estimated >= threshold,
+      * ``topk(k)`` -- the k keys with the largest estimates,
+
+    without storing the stream.  Memory is the hierarchy's tables plus
+    bounded per-group candidate pools.  Admission is append-only: distinct
+    group values enter until ``max_candidates_per_group`` is reached and
+    are never evicted, so recall over already-admitted values is monotone;
+    past the cap, later-arriving values are dropped and the
+    no-false-negative guarantee becomes conditional on the pools (the
+    standard space/recall trade).
+
+    Endpoints shard naturally: run one per ingest worker and fold with
+    ``merge_from`` at query time (cell-wise, exact by linearity).
+    """
+
+    def __init__(self, base_spec, key, *, max_candidates_per_group: int = 1 << 16,
+                 use_kernel: bool = False, dtype=jnp.int32):
+        from repro.core import hierarchy as hh
+
+        self._hh = hh
+        self.hspec = hh.HierarchySpec.from_spec(base_spec)
+        self.state = hh.init_hierarchy(self.hspec, key, dtype=dtype)
+        self.max_candidates = int(max_candidates_per_group)
+        self.use_kernel = use_kernel
+        self.total = 0
+        self._pools: List[np.ndarray] = [
+            np.zeros((0, len(g)), dtype=np.uint32)
+            for g in base_spec.partition
+        ]
+
+    def ingest(self, items: np.ndarray, freqs: Optional[np.ndarray] = None) -> None:
+        items = np.asarray(items, dtype=np.uint32)
+        if items.shape[0] == 0:
+            return
+        if freqs is None:
+            freqs = np.ones(items.shape[0], dtype=np.int64)
+        freqs = np.asarray(freqs)
+        self.total += int(freqs.sum())
+        for j, g in enumerate(self.hspec.base.partition):
+            self._pools[j] = self._admit(self._pools[j], items[:, list(g)])
+        # pad blocks to the next power of two so the jitted multi-level
+        # update compiles O(log B) variants, not one per block length
+        # (zero-frequency pad items are no-ops and stay out of the pools)
+        n = items.shape[0]
+        m = 1 << (n - 1).bit_length()
+        if m != n:
+            items = np.pad(items, ((0, m - n), (0, 0)))
+            freqs = np.pad(freqs, (0, m - n))
+        self.state = self._hh.update_jit(self.hspec, self.state,
+                                         jnp.asarray(items),
+                                         jnp.asarray(freqs))
+
+    def _admit(self, pool: np.ndarray, values: np.ndarray) -> np.ndarray:
+        """Append-only admission: dedupe the incoming block against the
+        pool and append up to the remaining capacity.  Admitted values are
+        never evicted (full-pool re-sorts would both cost O(pool log pool)
+        per block and make recall non-monotone)."""
+        free = self.max_candidates - pool.shape[0]
+        if free <= 0:
+            return pool
+        values = np.unique(np.ascontiguousarray(values), axis=0)
+        if pool.shape[0]:
+            row = [("", pool.dtype)] * pool.shape[1]
+            seen = np.isin(values.view(row).reshape(-1),
+                           np.ascontiguousarray(pool).view(row).reshape(-1))
+            values = values[~seen]
+        return np.concatenate([pool, values[:free]], axis=0)
+
+    def heavy_hitters(self, threshold: int) -> Tuple[np.ndarray, np.ndarray]:
+        return self._hh.find_heavy_hitters(
+            self.hspec, self.state, threshold, self._pools,
+            use_kernel=self.use_kernel)
+
+    def topk(self, k: int,
+             min_threshold: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k by estimate: geometric threshold descent until k found.
+
+        ``min_threshold`` floors the descent; the default scales with the
+        stream (total / 2^17) because at threshold ~1 every candidate
+        survives every level and the leaf evaluates the full candidate
+        cross-product -- exactly the blowup the hierarchy avoids.  Pass
+        ``min_threshold=1`` explicitly to force exhaustive descent on
+        small candidate pools.
+        """
+        if min_threshold is None:
+            min_threshold = max(1, self.total >> 17)
+        thr = max(self.total, 1)
+        items = np.zeros((0, self.hspec.base.schema.modularity), np.uint32)
+        est = np.zeros((0,), np.int64)
+        while thr >= min_threshold:
+            items, est = self.heavy_hitters(thr)
+            if len(est) >= k:
+                break
+            if thr == min_threshold:
+                break
+            thr = max(min_threshold, thr // 4)
+        return items[:k], est[:k]
+
+    def merge_from(self, other: "SketchTopKEndpoint") -> None:
+        """Fold another endpoint's sketch + pools in (cross-shard merge).
+
+        Shards must share the base spec and hash parameters (same spec +
+        PRNG key): cell-wise sums of tables hashed with different params --
+        or with the same params but permuted partition axes -- are garbage,
+        so mismatches are rejected rather than silently accepted.
+        """
+        if self.hspec.base != other.hspec.base:
+            raise ValueError(
+                "merge_from requires identical base specs on both endpoints")
+        for sa, sb in zip(self.state.states, other.state.states):
+            if not (np.array_equal(np.asarray(sa.params.q), np.asarray(sb.params.q))
+                    and np.array_equal(np.asarray(sa.params.r), np.asarray(sb.params.r))):
+                raise ValueError(
+                    "merge_from requires identical hash params on both "
+                    "endpoints (build them from the same spec and key)")
+        self.state = self._hh.merge(self.state, other.state)
+        self.total += other.total
+        for j in range(len(self._pools)):
+            self._pools[j] = self._admit(self._pools[j], other._pools[j])

@@ -5,4 +5,11 @@ from repro.streams.synthetic import (  # noqa: F401
     telecom_stream,
     zipf_graph_stream,
 )
+from repro.streams.heavy_hitters import (  # noqa: F401
+    HHWorkload,
+    exact_heavy_hitters,
+    group_candidates,
+    ngram_hh_workload,
+    zipf_hh_workload,
+)
 from repro.streams.stats import degree_stats, exact_marginals, observed_error  # noqa: F401

@@ -1,0 +1,78 @@
+"""Property-test shim: hypothesis when installed, deterministic fallback
+otherwise.
+
+The tier-1 suite must collect and run in containers without the
+``hypothesis`` package (this image bakes only the jax_pallas toolchain).
+Instead of ``pytest.importorskip`` silently dropping the property tests,
+this module re-exports ``given / settings / st`` from hypothesis when it is
+importable and otherwise substitutes a minimal deterministic runner:
+
+  * each ``@given`` test runs on a fixed number of examples drawn from a
+    seeded PRNG (same values every run, no shrinking, no database);
+  * the first two examples pin every strategy to its lower/upper boundary,
+    so the classic edge cases (0, max, first/last choice) are always hit;
+  * only the strategies this repo uses are implemented
+    (``st.integers``, ``st.sampled_from``).
+
+Tests import ``from _propcheck import given, settings, st`` and are
+oblivious to which implementation they got.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _N_EXAMPLES = 30
+    _SEED = 0x5EED
+
+    class _Strategy:
+        def __init__(self, low, high, draw):
+            self.low = low          # boundary example 0
+            self.high = high        # boundary example 1
+            self._draw = draw       # rng -> value
+
+        def example(self, i: int, rng: np.random.Generator):
+            if i == 0:
+                return self.low
+            if i == 1:
+                return self.high
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mimics hypothesis.strategies module
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                min_value, max_value,
+                lambda rng: int(rng.integers(min_value, max_value,
+                                             endpoint=True)))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(
+                elements[0], elements[-1],
+                lambda rng: elements[rng.integers(len(elements))])
+
+    def given(*strategies):
+        def decorate(fn):
+            # no functools.wraps: the zero-arg signature must be visible to
+            # pytest, else the example parameters look like fixtures
+            def run():
+                rng = np.random.default_rng(_SEED)
+                for i in range(_N_EXAMPLES):
+                    fn(*(s.example(i, rng) for s in strategies))
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return decorate
+
+    def settings(**_kw):
+        def decorate(fn):
+            return fn
+        return decorate

@@ -1,0 +1,93 @@
+"""Pallas kernels vs the core/sketch.py reference path (not just the jnp
+oracles in kernels/ref.py): same params, same stream => same table, same
+estimates, across the paper's three spec families, both table dtypes, and
+table widths that are not a multiple of the kernel tile."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sketch as sk
+from repro.core.hashing import KeySchema
+from repro.kernels.ops import KernelSketch
+
+_SCHEMA = KeySchema(domains=(1 << 32, 1 << 32))
+
+
+def _spec_cases():
+    # (name, spec, tile_h): every table_size is deliberately NOT a multiple
+    # of its tile so the padding path is always exercised
+    return [
+        ("count-min", sk.count_min_spec(_SCHEMA, 1000, 3), 256),
+        ("equal", sk.equal_sketch_spec(_SCHEMA, 1100, 2), 512),
+        ("mod", sk.mod_sketch_spec(_SCHEMA, [(0,), (1,)], (48, 90), 4), 512),
+        ("mod-joint", sk.mod_sketch_spec(
+            KeySchema(domains=(256,) * 4), [(0, 2), (1, 3)], (36, 45), 3), 256),
+    ]
+
+
+def _stream_for(spec, rng, b):
+    items = np.stack(
+        [rng.integers(0, d, b, dtype=np.uint64).astype(np.uint32)
+         for d in spec.schema.domains], axis=1)
+    freqs = rng.integers(1, 1 << 12, size=(b,)).astype(np.int32)
+    return items, freqs
+
+
+@pytest.mark.parametrize("name,spec,tile_h", _spec_cases())
+def test_update_and_query_parity_int32(name, spec, tile_h):
+    rng = np.random.default_rng(abs(hash(name)) % 2**32)
+    assert spec.table_size % tile_h != 0, "case must exercise padding"
+    ks = KernelSketch(spec, jax.random.PRNGKey(7), tile_h=tile_h,
+                      block_b=128, interpret=True)
+    items, freqs = _stream_for(spec, rng, 500)
+    ks.update(items, freqs)
+
+    core = sk.SketchState(
+        params=ks.params,
+        table=jnp.zeros((spec.width, spec.table_size), jnp.int32))
+    core = sk.update_jit(spec, core, jnp.asarray(items), jnp.asarray(freqs))
+
+    np.testing.assert_array_equal(np.asarray(ks.state().table),
+                                  np.asarray(core.table))
+    q = items[rng.choice(len(items), 97, replace=False)]
+    np.testing.assert_array_equal(
+        ks.query(q), np.asarray(sk.query_jit(spec, core, jnp.asarray(q))))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name,spec,tile_h", _spec_cases())
+def test_update_parity_float32(name, spec, tile_h):
+    """f32 tables (gradient sketches): one MXU contraction, tolerance-based
+    because float accumulation order differs between the paths."""
+    rng = np.random.default_rng(abs(hash(name + "f32")) % 2**32)
+    ks = KernelSketch(spec, jax.random.PRNGKey(9), tile_h=tile_h,
+                      block_b=128, dtype=jnp.float32, interpret=True)
+    items, _ = _stream_for(spec, rng, 500)
+    vals = rng.standard_normal(500).astype(np.float32)
+    ks.update(items, vals)
+
+    core = sk.SketchState(
+        params=ks.params,
+        table=jnp.zeros((spec.width, spec.table_size), jnp.float32))
+    core = sk.update_jit(spec, core, jnp.asarray(items), jnp.asarray(vals))
+
+    np.testing.assert_allclose(np.asarray(ks.state().table),
+                               np.asarray(core.table), rtol=1e-5, atol=1e-4)
+
+
+def test_block_padding_is_neutral():
+    """Stream length not a multiple of block_b: zero-padded tail items must
+    not change any estimate (they hash somewhere but add freq 0)."""
+    spec = sk.mod_sketch_spec(_SCHEMA, [(0,), (1,)], (100, 41), 2)
+    rng = np.random.default_rng(0)
+    items, freqs = _stream_for(spec, rng, 131)  # 131 % 128 != 0
+    ks = KernelSketch(spec, jax.random.PRNGKey(3), tile_h=128, block_b=128,
+                      interpret=True)
+    ks.update(items, freqs)
+    core = sk.SketchState(
+        params=ks.params,
+        table=jnp.zeros((spec.width, spec.table_size), jnp.int32))
+    core = sk.update_jit(spec, core, jnp.asarray(items), jnp.asarray(freqs))
+    np.testing.assert_array_equal(np.asarray(ks.state().table),
+                                  np.asarray(core.table))

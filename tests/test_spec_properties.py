@@ -1,0 +1,94 @@
+"""Property-style SketchSpec invariants (runs with or without hypothesis
+via the _propcheck shim): index ranges, stride consistency, merge
+sub-additivity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _propcheck import given, settings, st
+
+from repro.core import sketch as sk
+from repro.core.hashing import KeySchema
+
+_CONFIGS = [
+    # (domains, partition, ranges)
+    (((1 << 32), (1 << 32)), ((0, 1),), (1000,)),
+    (((1 << 32), (1 << 32)), ((0,), (1,)), (48, 90)),
+    ((4096, 256, 1000), ((0,), (1, 2)), (37, 91)),
+    ((256,) * 4, ((0, 2), (1, 3)), (64, 63)),
+    ((65536, 65536, 65536), ((0,), (1,), (2,)), (11, 13, 17)),
+]
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(_CONFIGS),
+       st.sampled_from([1, 2, 5]))
+@settings(max_examples=20, deadline=None)
+def test_row_indices_always_in_table(seed, config, w):
+    """Mixed-radix cell index in [0, table_size) for arbitrary keys, and the
+    jnp limb path agrees with the uint64 numpy oracle bit-for-bit."""
+    domains, part, ranges = config
+    spec = sk.SketchSpec(KeySchema(domains=domains), part, ranges, w)
+    rng = np.random.default_rng(seed)
+    params = sk.init_params(spec, jax.random.PRNGKey(seed % 9973))
+    items = np.stack(
+        [rng.integers(0, d, 128, dtype=np.uint64).astype(np.uint32)
+         for d in domains], axis=1)
+    idx_np = sk.compute_indices_np(spec, params, items)
+    idx_jx = np.asarray(sk.compute_indices(spec, params, jnp.asarray(items)))
+    assert idx_np.shape == (w, 128)
+    assert (idx_np < spec.table_size).all()
+    np.testing.assert_array_equal(idx_np, idx_jx)
+
+
+@given(st.sampled_from(_CONFIGS))
+@settings(max_examples=10, deadline=None)
+def test_strides_consistent_with_ranges(config):
+    """strides[j] == prod(ranges[j+1:]) and table_size == prod(ranges):
+    the mixed radix is exactly the row-major layout of the range grid."""
+    domains, part, ranges = config
+    spec = sk.SketchSpec(KeySchema(domains=domains), part, ranges, 2)
+    m = len(ranges)
+    for j in range(m):
+        assert spec.strides[j] == int(np.prod(ranges[j + 1:], dtype=np.int64))
+    assert spec.table_size == int(np.prod(ranges, dtype=np.int64))
+    # strides decrease and the largest addressable cell fits the table
+    top = sum((r - 1) * s for r, s in zip(ranges, spec.strides))
+    assert top == spec.table_size - 1
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(_CONFIGS))
+@settings(max_examples=10, deadline=None)
+def test_merge_linearity_for_nonnegative_streams(seed, config):
+    """Merge linearity, elementwise for non-negative streams: the merged
+    table is exactly the cell-wise sum, hence query(merge(a, b)) >=
+    query(a) + query(b) (min of sums dominates sum of mins) and the merged
+    estimate still upper-bounds the combined true frequency."""
+    domains, part, ranges = config
+    spec = sk.SketchSpec(KeySchema(domains=domains), part, ranges, 3)
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed % 7919)
+    items = np.stack(
+        [rng.integers(0, d, 400, dtype=np.uint64).astype(np.uint32)
+         for d in domains], axis=1)
+    freqs = rng.integers(1, 100, size=400).astype(np.int32)
+    a = sk.update_jit(spec, sk.init_state(spec, key),
+                      jnp.asarray(items[:200]), jnp.asarray(freqs[:200]))
+    b = sk.update_jit(spec, sk.init_state(spec, key),
+                      jnp.asarray(items[200:]), jnp.asarray(freqs[200:]))
+    ab = sk.merge(a, b)
+    pick = rng.choice(400, 64, replace=False)
+    q = jnp.asarray(items[pick])
+    est_ab = np.asarray(sk.query(spec, ab, q))
+    est_a = np.asarray(sk.query(spec, a, q))
+    est_b = np.asarray(sk.query(spec, b, q))
+    assert (est_ab >= est_a + est_b).all()
+    # the merged table is the exact cell-wise sum ...
+    np.testing.assert_array_equal(
+        np.asarray(ab.table), np.asarray(a.table) + np.asarray(b.table))
+    # ... so the merged estimate still never underestimates the true
+    # combined frequency
+    packed = [tuple(r) for r in items.tolist()]
+    true = {t: 0 for t in packed}
+    for t, f in zip(packed, freqs.tolist()):
+        true[t] += f
+    want = np.array([true[packed[i]] for i in pick])
+    assert (est_ab >= want).all()
