@@ -28,6 +28,22 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(row, flush=True)
 
 
+def rows_as_records() -> List[dict]:
+    """Emitted rows as JSON-ready records, ``derived`` parsed into k=v pairs
+    (the BENCH_*.json artifact schema; see benchmarks/run.py)."""
+    records = []
+    for row in ROWS:
+        name, us, derived = row.split(",", 2)
+        parsed = {}
+        for part in derived.split(";"):
+            if "=" in part:
+                k, v = part.split("=", 1)
+                parsed[k] = v
+        records.append({"name": name, "us_per_call": float(us),
+                        "derived": parsed, "raw": derived})
+    return records
+
+
 @functools.lru_cache(maxsize=None)
 def twitter_like() -> Stream:
     """Mild-skew graph stream, #targets ~ 3x #sources (Table III shape),

@@ -19,6 +19,10 @@ from repro.core.hashing import KeySchema
 from repro.kernels import ref
 from repro.kernels.hashes import make_plan
 from repro.kernels.sketch_update import padded_table_size, sketch_update_pallas
+from repro.kernels.sketch_update_conservative import (
+    conservative_chunk_b,
+    sketch_update_conservative_pallas,
+)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -49,6 +53,54 @@ def kernel_update_equivalence() -> None:
          f"interpret_s={t_int:.1f}")
 
 
+def kernel_update_conservative() -> None:
+    """Linear vs conservative update throughput on the same stream block.
+
+    The conservative path is sequential in B (min-gather + max-scatter per
+    item), so its throughput floor is structural, not incidental; this case
+    records the linear-vs-conservative ratio alongside kernel/reference
+    parity.  On this container both jnp references are the timed paths and
+    the Pallas kernels run interpreted for the parity bit.
+    """
+    rng = np.random.default_rng(1)
+    schema = KeySchema(domains=(1 << 32, 1 << 32))
+    spec = sk.mod_sketch_spec(schema, [(0,), (1,)], (256, 256), 4)
+    plan = make_plan(spec)
+    params = sk.init_params(spec, KEY)
+    b = 1024
+    items = rng.integers(0, 1 << 32, size=(b, 2), dtype=np.uint64).astype(np.uint32)
+    items[: b // 8] = items[0]  # duplicate-heavy head, the skewed-stream case
+    freqs = rng.integers(1, 100, size=(b,)).astype(np.int32)
+    chunks = schema.module_chunks(jnp.asarray(items))
+    h_pad = padded_table_size(spec.table_size, 512)
+    t0 = jnp.zeros((spec.width, h_pad), jnp.int32)
+
+    us_lin, _ = timed(lambda: jax.block_until_ready(
+        ref.sketch_update_ref(plan, t0, chunks, jnp.asarray(freqs),
+                              params.q, params.r)))
+    state0 = sk.SketchState(
+        params=params,
+        table=jnp.zeros((spec.width, spec.table_size), jnp.int32))
+    us_cons, want = timed(lambda: jax.block_until_ready(
+        sk.update_conservative_jit(spec, state0, jnp.asarray(items),
+                                   jnp.asarray(freqs)).table))
+
+    t_int0 = time.perf_counter()
+    got = sketch_update_conservative_pallas(
+        plan, t0, chunks, jnp.asarray(freqs), params.q, params.r,
+        interpret=True)
+    t_int = time.perf_counter() - t_int0
+    exact = bool((np.asarray(got)[:, : spec.table_size]
+                  == np.asarray(want)).all())
+    chunk = conservative_chunk_b(b, chunks.shape[1], spec.width, h_pad, 4)
+    emit("kernel_update_conservative", us_cons,
+         f"items_per_s={b / (us_cons / 1e6):.3e};"
+         f"linear_items_per_s={b / (us_lin / 1e6):.3e};"
+         f"linear_vs_conservative={us_cons / us_lin:.2f}x;"
+         f"chunk_b={chunk};pallas_interpret_exact={exact};"
+         f"interpret_s={t_int:.1f}")
+
+
 def kernel_vmem_budget() -> None:
     """Structural check: worst-case VMEM working set of the update kernel."""
     b, tile_h, c = 1024, 512, 4
@@ -61,4 +113,5 @@ def kernel_vmem_budget() -> None:
          f"bytes={total};mb={total / 2**20:.2f};fits_16mb_vmem={total < 16 * 2**20}")
 
 
-ALL = [kernel_update_equivalence, kernel_vmem_budget]
+ALL = [kernel_update_equivalence, kernel_update_conservative,
+       kernel_vmem_budget]

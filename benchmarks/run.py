@@ -1,11 +1,15 @@
 """Benchmark driver: one function per paper table/figure + system benches.
 
-Prints ``name,us_per_call,derived`` CSV (see benchmarks.common.emit).
+Prints ``name,us_per_call,derived`` CSV (see benchmarks.common.emit) and
+writes the same rows as a ``BENCH_*.json`` artifact (``--json-out``) so CI
+can archive the perf trajectory run over run.
 Usage: PYTHONPATH=src python -m benchmarks.run [--only substring]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
@@ -15,13 +19,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run benchmarks whose name contains this substring")
+    ap.add_argument("--json-out", default="BENCH_RESULTS.json",
+                    help="path of the JSON artifact (BENCH_*.json pattern); "
+                         "'' disables")
     args = ap.parse_args()
 
-    from benchmarks import bounds_check, kernel_microbench, paper_figs, roofline_report
+    import jax
+
+    from benchmarks import bounds_check, common, kernel_microbench, paper_figs, \
+        roofline_report
     benches = (paper_figs.ALL + bounds_check.ALL + kernel_microbench.ALL
                + roofline_report.ALL)
     print("name,us_per_call,derived")
-    failures = 0
+    t_start = time.time()
+    failures = []
     for fn in benches:
         if args.only and args.only not in fn.__name__:
             continue
@@ -29,10 +40,27 @@ def main() -> None:
         try:
             fn()
         except Exception:
-            failures += 1
+            failures.append(fn.__name__)
             print(f"{fn.__name__},-1,ERROR", flush=True)
             traceback.print_exc()
         print(f"# {fn.__name__} finished in {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr, flush=True)
+
+    if args.json_out:
+        artifact = {
+            "started_unix": t_start,
+            "wall_s": time.time() - t_start,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "only": args.only,
+            "failures": failures,
+            "results": common.rows_as_records(),
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# wrote {args.json_out} ({len(artifact['results'])} rows)",
               file=sys.stderr, flush=True)
     if failures:
         sys.exit(1)

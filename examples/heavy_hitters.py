@@ -52,3 +52,18 @@ items, est = shards[0].topk(10)
 true_top = wl.exact_freqs[:10] if len(wl.exact_freqs) >= 10 else wl.exact_freqs
 print(f"endpoint top-10 estimates: {est.tolist()}")
 print(f"exact top frequencies:     {true_top.tolist()}")
+
+# conservative endpoint: tighter estimates, but single-shard (non-linear
+# tables refuse merge_from -- excluded from the cell-wise merge/psum paths)
+cons = SketchTopKEndpoint(spec, key, mode="conservative")
+cons.ingest(wl.stream.items, wl.stream.freqs)
+cons_items, est_cons = cons.topk(10)
+# same hash params + same stream => per-key dominance (rank-wise comparison
+# would be unsound once the two endpoints' candidate pools diverge)
+lin_est = {tuple(k): e for k, e in zip(items.tolist(), est.tolist())}
+overlap = [(c, lin_est[tuple(k)])
+           for k, c in zip(cons_items.tolist(), est_cons.tolist())
+           if tuple(k) in lin_est]
+assert overlap and all(c <= l for c, l in overlap), \
+    "conservative must be tighter per key"
+print(f"conservative top-10:       {est_cons.tolist()} (<= linear per key)")

@@ -23,6 +23,10 @@ ap.add_argument("--occurrences", type=int, default=2_000_000)
 ap.add_argument("--modularity", type=int, default=8, choices=(2, 4, 8))
 ap.add_argument("--h", type=int, default=4096)
 ap.add_argument("--w", type=int, default=5)
+ap.add_argument("--mode", default="linear", choices=("linear", "conservative"),
+                help="conservative = tighter estimates, single-shard only "
+                     "(non-linear table, no merge); slower on the interpret "
+                     "path, so pair with a smaller --occurrences")
 args = ap.parse_args()
 
 base = ipv4_stream(n_src_hosts=30_000, n_tgt_hosts=3_000, n_pairs=120_000,
@@ -42,7 +46,7 @@ print(f"greedy config in {time.perf_counter()-t0:.1f}s "
       f"({g.n_candidates} candidates): {g.spec.describe()}")
 
 # --- stream the full trace through the kernel path -------------------------
-ks = KernelSketch(g.spec, jax.random.PRNGKey(1), block_b=1024)
+ks = KernelSketch(g.spec, jax.random.PRNGKey(1), block_b=1024, mode=args.mode)
 t0 = time.perf_counter()
 seen = 0
 for s in range(0, len(stream.items), 1 << 14):
@@ -51,8 +55,8 @@ for s in range(0, len(stream.items), 1 << 14):
     ks.update(blk_i, blk_f)
     seen += int(blk_f.sum())
 dt = time.perf_counter() - t0
-print(f"ingested {seen:,} occurrences in {dt:.1f}s "
-      f"({seen/dt:.0f} weighted-items/s on the interpret path)")
+print(f"ingested {seen:,} occurrences in {dt:.1f}s ({args.mode} update, "
+      f"{seen/dt:.0f} weighted-items/s on the interpret path)")
 
 # --- queries ----------------------------------------------------------------
 for qname, (qi, qf) in (

@@ -12,6 +12,15 @@ Queries run anywhere once merged; for row-sharded tables (w split over the
 
 These helpers are mesh-generic: they work on the production (16,16) /
 (2,16,16) meshes in the dry-run and on small host-platform meshes in tests.
+
+Every path in this module assumes the *linear* update (core.sketch.update /
+the one-hot-matmul kernel).  Conservative tables
+(core.sketch.update_conservative, kernels/sketch_update_conservative.py)
+are NOT linear in the stream and are excluded from the cell-wise merge and
+psum paths here: a psum of conservatively built tables is not the table of
+the union stream.  Conservative mode is single-shard only (see
+kernels/ops.KernelSketch and serving.engine.SketchTopKEndpoint, which
+refuse merge in that mode).
 """
 from __future__ import annotations
 

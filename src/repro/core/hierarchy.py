@@ -137,9 +137,31 @@ def update(hspec: HierarchySpec, state: HierarchyState,
     return HierarchyState(states=tuple(new))
 
 
+def update_conservative(hspec: HierarchySpec, state: HierarchyState,
+                        items: jax.Array, freqs: jax.Array) -> HierarchyState:
+    """Conservative fold into every level (freqs must be non-negative).
+
+    Each level applies core.sketch.update_conservative independently, so
+    every level still never underestimates and the heavy-hitter descent's
+    no-false-negative argument is unchanged (est(prefix) >= true(prefix) >=
+    true(key)).  The resulting tables are NOT linear in the stream: a
+    conservatively built hierarchy must not be merged cell-wise (see
+    :func:`merge`) or fed through the psum paths of core/distributed.py.
+    """
+    items = jnp.asarray(items)
+    new = []
+    for lvl, (spec_l, st_l) in enumerate(zip(hspec.levels, state.states)):
+        new.append(sk.update_conservative(
+            spec_l, st_l, hspec.level_items(lvl, items), freqs))
+    return HierarchyState(states=tuple(new))
+
+
 def merge(a: HierarchyState, b: HierarchyState) -> HierarchyState:
     """Cell-wise merge per level -- exact by linearity, same contract as
-    core.sketch.merge, so hierarchies shard/merge like single sketches."""
+    core.sketch.merge, so hierarchies shard/merge like single sketches.
+    Only valid for hierarchies built with the linear update: conservative
+    tables (:func:`update_conservative`) are excluded from cell-wise
+    merging, which is why SketchTopKEndpoint.merge_from refuses them."""
     return HierarchyState(states=tuple(
         sk.merge(sa, sb) for sa, sb in zip(a.states, b.states)))
 
@@ -161,6 +183,12 @@ import functools
 def update_jit(hspec: HierarchySpec, state: HierarchyState,
                items, freqs) -> HierarchyState:
     return update(hspec, state, items, freqs)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def update_conservative_jit(hspec: HierarchySpec, state: HierarchyState,
+                            items, freqs) -> HierarchyState:
+    return update_conservative(hspec, state, items, freqs)
 
 
 def sharded_hierarchy_build(

@@ -99,14 +99,34 @@ def count_min_spec(schema: KeySchema, h: int, w: int) -> SketchSpec:
     return SketchSpec(schema, (tuple(range(schema.modularity)),), (int(h),), w)
 
 
+def _floor_root(x: int, n: int) -> int:
+    """max r >= 1 with r**n <= x, exact (float root + integer adjustment)."""
+    r = max(1, int(round(x ** (1.0 / n))))
+    while r > 1 and r ** n > x:
+        r -= 1
+    while (r + 1) ** n <= x:
+        r += 1
+    return r
+
+
 def equal_ranges(h: int, n: int) -> Tuple[int, ...]:
-    """n integer ranges ~ h^(1/n) whose product is as close to h as possible."""
-    base = max(2, int(round(h ** (1.0 / n))))
-    ranges = [base] * n
-    # Nudge the last range so the product tracks h (paper's own integer
-    # examples are approximate too, e.g. 848*424 vs h=360000).
-    prod_rest = int(np.prod(ranges[:-1], dtype=np.int64)) if n > 1 else 1
-    ranges[-1] = max(2, int(round(h / prod_rest)))
+    """n integer ranges ~ h^(1/n) with ``prod(ranges) <= h`` guaranteed.
+
+    Greedy floor-root split: range j is the floor (n-j)-th root of the
+    remaining budget, so the product never exceeds the allocated table size
+    (the old round-and-nudge version overshot badly for small h / large n,
+    e.g. h=2, n=3 gave 2*2*2 = 4x the budget) while still tracking h from
+    below (paper's own integer examples are approximate too, e.g. 848*424
+    vs h=360000).  Ranges degrade to 1 when h < 2**n.
+    """
+    if n < 1:
+        raise ValueError("need n >= 1 ranges")
+    rem = max(1, int(h))
+    ranges = []
+    for j in range(n):
+        r = _floor_root(rem, n - j)
+        ranges.append(r)
+        rem //= r
     return tuple(ranges)
 
 
@@ -245,6 +265,30 @@ def update_conservative(
     return SketchState(params=state.params, table=table)
 
 
+def check_conservative_freqs(freqs, table_dtype) -> None:
+    """Validate a conservative-update frequency block (host-side; shared by
+    kernels/ops.KernelSketch and serving.engine.SketchTopKEndpoint).
+
+    f < 0 would make est = min + f <= every cell, a silent no-op; an int
+    frequency past the table dtype's range would wrap negative in the cast
+    with the same silent outcome.  Both are rejected loudly.
+    """
+    freqs = np.asarray(freqs)
+    if freqs.size == 0:
+        return
+    if not np.all(freqs >= 0):   # catches f < 0 AND NaN
+        raise ValueError(
+            "conservative update requires non-negative frequencies "
+            "(f < 0 would be a silent no-op; NaN would poison every "
+            "touched cell)")
+    if (jnp.issubdtype(table_dtype, jnp.integer)
+            and freqs.max() > np.iinfo(np.dtype(table_dtype)).max):
+        raise ValueError(
+            f"per-arrival frequency exceeds the {np.dtype(table_dtype)} "
+            "table range (the cast would wrap negative and the update "
+            "would silently no-op): use a wider table dtype")
+
+
 def merge(a: SketchState, b: SketchState) -> SketchState:
     """Cell-wise merge: sketch(A + B) == merge(sketch(A), sketch(B)) exactly."""
     return SketchState(params=a.params, table=a.table + b.table)
@@ -322,6 +366,12 @@ def update_jit(spec: SketchSpec, state: SketchState, items, freqs) -> SketchStat
 @functools.partial(jax.jit, static_argnums=0)
 def query_jit(spec: SketchSpec, state: SketchState, items) -> jax.Array:
     return query(spec, state, items)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def update_conservative_jit(spec: SketchSpec, state: SketchState,
+                            items, freqs) -> SketchState:
+    return update_conservative(spec, state, items, freqs)
 
 
 def stream_blocks(items, freqs, block: int):

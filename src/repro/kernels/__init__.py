@@ -1,10 +1,13 @@
-"""Pallas TPU kernels for the sketch hot path (update = one-hot MXU matmul,
-query = one-hot gather + row-min), with jnp oracles in ref.py and jitd
-wrappers in ops.py.  Validated in interpret mode on CPU; set
-interpret=False on TPU."""
+"""Pallas TPU kernels for the sketch hot path (linear update = one-hot MXU
+matmul, conservative update = VMEM-resident sequential min/max, query =
+one-hot gather + row-min), with jnp oracles in ref.py and jitd wrappers in
+ops.py.  Validated in interpret mode on CPU; set interpret=False on TPU."""
 from repro.kernels.hashes import IndexPlan, make_plan  # noqa: F401
 from repro.kernels.hier_query import (  # noqa: F401
     hier_candidate_query,
     hier_candidate_query_ref,
 )
 from repro.kernels.ops import KernelSketch  # noqa: F401
+from repro.kernels.sketch_update_conservative import (  # noqa: F401
+    sketch_update_conservative_pallas,
+)

@@ -6,23 +6,41 @@ padding stream blocks to a fixed block length (so one compiled kernel serves
 the whole stream), and CPU fallback via ``interpret=True`` (the kernel body
 executes in Python on CPU -- bit-identical logic, which is how the kernels
 are validated in this container; on TPU set ``interpret=False``).
+
+Two update modes share the wrapper:
+
+  * ``mode="linear"`` (default): the one-hot MXU matmul update
+    (kernels/sketch_update.py).  The table stays linear in the stream, so
+    sketches merge cell-wise (:meth:`KernelSketch.merge`) and compose with
+    the distributed runtime.
+  * ``mode="conservative"``: the Estan-Varghese conservative update
+    (kernels/sketch_update_conservative.py) -- strictly tighter estimates,
+    but the table is NOT linear in the stream, so ``merge``/``state()``
+    (the cell-wise merge surfaces) are refused; query-side use is
+    unchanged.  When the table working set exceeds the VMEM budget the
+    update transparently takes the jnp reference path
+    (core.sketch.update_conservative), block by block.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sketch as sk
-from repro.kernels import ref
-from repro.kernels.hashes import IndexPlan, make_plan
+from repro.kernels.hashes import make_plan
 from repro.kernels.sketch_update import padded_table_size, sketch_update_pallas
+from repro.kernels.sketch_update_conservative import (
+    conservative_chunk_b,
+    sketch_update_conservative_pallas,
+)
 from repro.kernels.sketch_query import sketch_query_pallas
 
 _MAX_KERNEL_FREQ = 1 << 24  # two 12-bit limbs
+
+MODES = ("linear", "conservative")
 
 
 def default_interpret() -> bool:
@@ -34,7 +52,10 @@ class KernelSketch:
 
     def __init__(self, spec: sk.SketchSpec, key: jax.Array, *,
                  tile_h: int = 512, block_b: int = 1024,
-                 dtype=jnp.int32, interpret: Optional[bool] = None):
+                 dtype=jnp.int32, interpret: Optional[bool] = None,
+                 mode: str = "linear"):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.spec = spec
         self.plan = make_plan(spec)
         self.params = sk.init_params(spec, key)
@@ -43,13 +64,41 @@ class KernelSketch:
         self.h_pad = padded_table_size(spec.table_size, tile_h)
         self.table = jnp.zeros((spec.width, self.h_pad), dtype=dtype)
         self.interpret = default_interpret() if interpret is None else interpret
+        self.mode = mode
 
     # -- stream ops ---------------------------------------------------------
+    def _check_freqs(self, freqs: np.ndarray) -> None:
+        """Reject frequencies the kernel paths cannot represent.
+
+        The *linear* int path uses a two-12-bit-limb split whose f32
+        partial sums are exact only for magnitudes < 2^24, so that bound
+        applies to |f|, not just positive f -- and negative frequencies are
+        rejected outright rather than silently relying on arithmetic-shift
+        limb behaviour.  The conservative kernel has no limb split
+        (gather/min/add/max, bit-exact at any int32 magnitude) so only the
+        non-negativity requirement applies there (f < 0 would be a silent
+        no-op: est = min + f <= every cell).  Turnstile streams take the
+        core.sketch reference path or a float table.
+        """
+        if freqs.size == 0:
+            return
+        if self.mode == "conservative":
+            sk.check_conservative_freqs(freqs, self.table.dtype)
+            return
+        if jnp.issubdtype(self.table.dtype, jnp.integer):
+            if np.abs(freqs).max() >= _MAX_KERNEL_FREQ:
+                raise ValueError(
+                    "per-arrival |frequency| >= 2^24 overflows the int-table "
+                    "limb split: use the core.sketch path")
+            if freqs.min() < 0:
+                raise ValueError(
+                    "negative frequencies are not supported on int tables: "
+                    "use the core.sketch path (or a float32 table)")
+
     def update(self, items, freqs) -> None:
         items = np.asarray(items, dtype=np.uint32)
         freqs = np.asarray(freqs)
-        if freqs.max(initial=0) >= _MAX_KERNEL_FREQ:
-            raise ValueError("per-arrival frequency >= 2^24: use core.sketch path")
+        self._check_freqs(freqs)
         b = self.block_b
         for s in range(0, items.shape[0], b):
             blk_i = items[s : s + b]
@@ -59,11 +108,35 @@ class KernelSketch:
                 blk_i = np.pad(blk_i, ((0, pad), (0, 0)))
                 blk_f = np.pad(blk_f, (0, pad))
             chunks = self.spec.schema.module_chunks(jnp.asarray(blk_i))
-            self.table = sketch_update_pallas(
-                self.plan, self.table, chunks, jnp.asarray(blk_f),
+            if self.mode == "conservative":
+                self._update_block_conservative(blk_i, chunks,
+                                                jnp.asarray(blk_f))
+            else:
+                self.table = sketch_update_pallas(
+                    self.plan, self.table, chunks, jnp.asarray(blk_f),
+                    self.params.q, self.params.r,
+                    tile_h=self.tile_h, interpret=self.interpret,
+                )
+
+    def _update_block_conservative(self, blk_i, chunks, blk_f) -> None:
+        w, h_pad = self.table.shape
+        chunk_b = conservative_chunk_b(
+            chunks.shape[0], chunks.shape[1], w, h_pad,
+            self.table.dtype.itemsize)
+        if chunk_b is not None:
+            self.table = sketch_update_conservative_pallas(
+                self.plan, self.table, chunks, blk_f,
                 self.params.q, self.params.r,
-                tile_h=self.tile_h, interpret=self.interpret,
+                chunk_b=chunk_b, interpret=self.interpret,
             )
+        else:
+            # table working set exceeds VMEM: jnp reference path, same math
+            h = self.spec.table_size
+            state = sk.SketchState(params=self.params,
+                                   table=self.table[:, :h])
+            state = sk.update_conservative_jit(
+                self.spec, state, jnp.asarray(blk_i), blk_f)
+            self.table = self.table.at[:, :h].set(state.table)
 
     def query(self, items) -> np.ndarray:
         items = np.asarray(items, dtype=np.uint32)
@@ -75,7 +148,43 @@ class KernelSketch:
         return np.asarray(est)
 
     # -- interop ------------------------------------------------------------
+    def merge(self, other: "KernelSketch") -> None:
+        """Cell-wise in-place merge (cross-shard fold), linear mode only.
+
+        Conservative tables are not linear in the stream -- the sum of two
+        conservatively built tables is NOT the table of the concatenated
+        stream -- so merging them is refused rather than silently wrong.
+        """
+        if self.mode != "linear" or other.mode != "linear":
+            raise ValueError(
+                "merge is only defined for linear-mode sketches: "
+                "conservative tables are not linear in the stream")
+        if self.spec != other.spec or self.h_pad != other.h_pad:
+            raise ValueError("merge requires identical specs and padding")
+        if self.table.dtype != other.table.dtype:
+            raise ValueError(
+                "merge requires identical table dtypes (an int32+float32 "
+                "sum would silently promote and lose exact counts)")
+        if not (np.array_equal(np.asarray(self.params.q), np.asarray(other.params.q))
+                and np.array_equal(np.asarray(self.params.r), np.asarray(other.params.r))):
+            raise ValueError(
+                "merge requires identical hash params (same spec and key)")
+        self.table = self.table + other.table
+
     def state(self) -> sk.SketchState:
-        """Unpadded SketchState view (for merge with the reference path)."""
+        """Unpadded SketchState view (for merge with the reference path).
+
+        Refused in conservative mode: SketchState is the cell-wise-merge /
+        psum currency of the distributed runtime, and conservative tables
+        must not enter it.  Use :meth:`table_view` for read-only access.
+        """
+        if self.mode != "linear":
+            raise ValueError(
+                "state() feeds the cell-wise merge path, which is invalid "
+                "for conservative tables; use table_view() or query()")
         return sk.SketchState(params=self.params,
                               table=self.table[:, : self.spec.table_size])
+
+    def table_view(self) -> np.ndarray:
+        """Read-only unpadded table copy (inspection/tests; any mode)."""
+        return np.asarray(self.table[:, : self.spec.table_size])

@@ -133,29 +133,42 @@ class SketchTopKEndpoint:
       * ``topk(k)`` -- the k keys with the largest estimates,
 
     without storing the stream.  Memory is the hierarchy's tables plus
-    bounded per-group candidate pools.  Admission is append-only: distinct
-    group values enter until ``max_candidates_per_group`` is reached and
-    are never evicted, so recall over already-admitted values is monotone;
-    past the cap, later-arriving values are dropped and the
-    no-false-negative guarantee becomes conditional on the pools (the
-    standard space/recall trade).
+    bounded per-group candidate pools.  Admission is a weighted
+    space-saving summary per group (core/summary.py): at capacity m, a new
+    value evicts the lightest entry instead of being dropped, so any group
+    value carrying more than total/m of the stream's weight is in the pool
+    no matter how late it first arrives; the no-false-negative guarantee
+    of the descent is conditional on that W/m admission bound.
 
-    Endpoints shard naturally: run one per ingest worker and fold with
-    ``merge_from`` at query time (cell-wise, exact by linearity).
+    ``mode="conservative"`` applies the Estan-Varghese conservative update
+    per level: strictly tighter estimates, but the tables are no longer
+    linear in the stream, so such an endpoint refuses ``merge_from`` (both
+    directions) and must stay single-shard -- conservative tables are
+    excluded from the cell-wise merge and psum paths of
+    core/distributed.py.
+
+    Linear endpoints shard naturally: run one per ingest worker and fold
+    with ``merge_from`` at query time (tables cell-wise, exact by
+    linearity; candidate summaries via the mergeable-summaries rule).
     """
 
     def __init__(self, base_spec, key, *, max_candidates_per_group: int = 1 << 16,
-                 use_kernel: bool = False, dtype=jnp.int32):
+                 use_kernel: bool = False, dtype=jnp.int32,
+                 mode: str = "linear"):
         from repro.core import hierarchy as hh
+        from repro.core.summary import SpaceSaving
 
+        if mode not in ("linear", "conservative"):
+            raise ValueError(f"mode must be 'linear' or 'conservative', got {mode!r}")
         self._hh = hh
         self.hspec = hh.HierarchySpec.from_spec(base_spec)
         self.state = hh.init_hierarchy(self.hspec, key, dtype=dtype)
         self.max_candidates = int(max_candidates_per_group)
         self.use_kernel = use_kernel
+        self.mode = mode
         self.total = 0
-        self._pools: List[np.ndarray] = [
-            np.zeros((0, len(g)), dtype=np.uint32)
+        self._pools: List[SpaceSaving] = [
+            SpaceSaving(self.max_candidates, len(g))
             for g in base_spec.partition
         ]
 
@@ -166,9 +179,12 @@ class SketchTopKEndpoint:
         if freqs is None:
             freqs = np.ones(items.shape[0], dtype=np.int64)
         freqs = np.asarray(freqs)
+        if self.mode == "conservative":
+            from repro.core.sketch import check_conservative_freqs
+            check_conservative_freqs(freqs, self.state.states[0].table.dtype)
         self.total += int(freqs.sum())
         for j, g in enumerate(self.hspec.base.partition):
-            self._pools[j] = self._admit(self._pools[j], items[:, list(g)])
+            self._pools[j].offer(items[:, list(g)], freqs)
         # pad blocks to the next power of two so the jitted multi-level
         # update compiles O(log B) variants, not one per block length
         # (zero-frequency pad items are no-ops and stay out of the pools)
@@ -177,29 +193,22 @@ class SketchTopKEndpoint:
         if m != n:
             items = np.pad(items, ((0, m - n), (0, 0)))
             freqs = np.pad(freqs, (0, m - n))
-        self.state = self._hh.update_jit(self.hspec, self.state,
-                                         jnp.asarray(items),
-                                         jnp.asarray(freqs))
+        fold = (self._hh.update_conservative_jit
+                if self.mode == "conservative" else self._hh.update_jit)
+        self.state = fold(self.hspec, self.state, jnp.asarray(items),
+                          jnp.asarray(freqs))
 
-    def _admit(self, pool: np.ndarray, values: np.ndarray) -> np.ndarray:
-        """Append-only admission: dedupe the incoming block against the
-        pool and append up to the remaining capacity.  Admitted values are
-        never evicted (full-pool re-sorts would both cost O(pool log pool)
-        per block and make recall non-monotone)."""
-        free = self.max_candidates - pool.shape[0]
-        if free <= 0:
-            return pool
-        values = np.unique(np.ascontiguousarray(values), axis=0)
-        if pool.shape[0]:
-            row = [("", pool.dtype)] * pool.shape[1]
-            seen = np.isin(values.view(row).reshape(-1),
-                           np.ascontiguousarray(pool).view(row).reshape(-1))
-            values = values[~seen]
-        return np.concatenate([pool, values[:free]], axis=0)
+    def candidates(self) -> List[np.ndarray]:
+        """Per-group candidate value arrays from the space-saving pools."""
+        return [p.values() for p in self._pools]
 
-    def heavy_hitters(self, threshold: int) -> Tuple[np.ndarray, np.ndarray]:
+    def heavy_hitters(self, threshold: int,
+                      candidates: Optional[List[np.ndarray]] = None,
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        if candidates is None:
+            candidates = self.candidates()
         return self._hh.find_heavy_hitters(
-            self.hspec, self.state, threshold, self._pools,
+            self.hspec, self.state, threshold, candidates,
             use_kernel=self.use_kernel)
 
     def topk(self, k: int,
@@ -218,8 +227,9 @@ class SketchTopKEndpoint:
         thr = max(self.total, 1)
         items = np.zeros((0, self.hspec.base.schema.modularity), np.uint32)
         est = np.zeros((0,), np.int64)
+        cands = self.candidates()  # hoisted: pools don't change mid-descent
         while thr >= min_threshold:
-            items, est = self.heavy_hitters(thr)
+            items, est = self.heavy_hitters(thr, candidates=cands)
             if len(est) >= k:
                 break
             if thr == min_threshold:
@@ -230,11 +240,21 @@ class SketchTopKEndpoint:
     def merge_from(self, other: "SketchTopKEndpoint") -> None:
         """Fold another endpoint's sketch + pools in (cross-shard merge).
 
+        Only defined for linear endpoints: conservative tables are not
+        linear in the stream, so a cell-wise sum of two conservatively
+        built hierarchies is not the hierarchy of the union stream --
+        conservative endpoints are single-shard by construction and
+        rejected here (both directions).
+
         Shards must share the base spec and hash parameters (same spec +
         PRNG key): cell-wise sums of tables hashed with different params --
         or with the same params but permuted partition axes -- are garbage,
         so mismatches are rejected rather than silently accepted.
         """
+        if self.mode != "linear" or other.mode != "linear":
+            raise ValueError(
+                "merge_from is only defined for linear endpoints: "
+                "conservative tables cannot be merged cell-wise")
         if self.hspec.base != other.hspec.base:
             raise ValueError(
                 "merge_from requires identical base specs on both endpoints")
@@ -246,5 +266,5 @@ class SketchTopKEndpoint:
                     "endpoints (build them from the same spec and key)")
         self.state = self._hh.merge(self.state, other.state)
         self.total += other.total
-        for j in range(len(self._pools)):
-            self._pools[j] = self._admit(self._pools[j], other._pools[j])
+        for mine, theirs in zip(self._pools, other._pools):
+            mine.merge_from(theirs)

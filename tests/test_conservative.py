@@ -1,0 +1,147 @@
+"""Conservative-mode invariants across the stack: point-wise tighter than
+linear, never underestimates, and excluded from every cell-wise-merge
+surface (KernelSketch.merge/state, endpoint merge_from / sharding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hierarchy as hh
+from repro.core import sketch as sk
+from repro.core.hashing import KeySchema
+from repro.kernels.ops import KernelSketch
+from repro.serving.engine import SketchTopKEndpoint
+
+_SCHEMA = KeySchema(domains=(1 << 32, 1 << 32))
+
+
+def _zipfish_stream(rng, n, n_keys=400):
+    ranks = rng.zipf(1.3, size=n).clip(max=n_keys) - 1
+    keys = rng.integers(0, 1 << 32, size=(n_keys, 2),
+                        dtype=np.uint64).astype(np.uint32)
+    items = keys[ranks]
+    freqs = rng.integers(1, 20, size=n).astype(np.int32)
+    return items, freqs
+
+
+def _true_freqs(items, freqs):
+    packed = items[:, 0].astype(np.uint64) << np.uint64(32) | items[:, 1]
+    uniq, inv = np.unique(packed, return_inverse=True)
+    return np.bincount(inv, weights=freqs.astype(np.float64))[inv]
+
+
+def test_kernel_conservative_pointwise_leq_linear_and_overestimates():
+    """est_true <= est_conservative <= est_linear, point-wise, same params."""
+    spec = sk.mod_sketch_spec(_SCHEMA, [(0,), (1,)], (40, 40), 3)
+    rng = np.random.default_rng(0)
+    items, freqs = _zipfish_stream(rng, 3000)
+    lin = KernelSketch(spec, jax.random.PRNGKey(5), tile_h=256, block_b=256,
+                       interpret=True)
+    cons = KernelSketch(spec, jax.random.PRNGKey(5), tile_h=256, block_b=256,
+                        interpret=True, mode="conservative")
+    lin.update(items, freqs)
+    cons.update(items, freqs)
+    # same key => same hash params => same cells; conservative writes
+    # max(cur, min+f) <= cur+f, so the table (hence every query) dominates
+    assert (cons.table_view() <= lin.table_view()).all()
+
+    q = items[rng.choice(len(items), 200, replace=False)]
+    e_lin, e_cons = lin.query(q), cons.query(q)
+    assert (e_cons <= e_lin).all()
+    # never underestimates (queried keys all appear in the stream)
+    tmap = {tuple(it): t for it, t in zip(items, _true_freqs(items, freqs))}
+    want = np.array([tmap[tuple(r)] for r in q])
+    assert (e_cons >= want - 1e-9).all()
+
+
+def test_conservative_kernel_sketch_refuses_merge_surfaces():
+    spec = sk.mod_sketch_spec(_SCHEMA, [(0,), (1,)], (16, 16), 2)
+    key = jax.random.PRNGKey(0)
+    cons = KernelSketch(spec, key, tile_h=128, block_b=64, interpret=True,
+                        mode="conservative")
+    lin = KernelSketch(spec, key, tile_h=128, block_b=64, interpret=True)
+    with pytest.raises(ValueError, match="not linear"):
+        cons.merge(lin)
+    with pytest.raises(ValueError, match="not linear"):
+        lin.merge(cons)
+    with pytest.raises(ValueError, match="cell-wise merge"):
+        cons.state()
+    assert cons.table_view().shape == (2, spec.table_size)  # inspection ok
+    with pytest.raises(ValueError, match="mode"):
+        KernelSketch(spec, key, mode="bogus")
+
+
+def test_linear_kernel_sketch_merge_is_exact():
+    """Positive control: linear merge == building on the whole stream."""
+    spec = sk.mod_sketch_spec(_SCHEMA, [(0,), (1,)], (40, 40), 3)
+    rng = np.random.default_rng(3)
+    items, freqs = _zipfish_stream(rng, 1000)
+    key = jax.random.PRNGKey(1)
+    mk = lambda: KernelSketch(spec, key, tile_h=256, block_b=128,
+                              interpret=True)
+    a, b, whole = mk(), mk(), mk()
+    a.update(items[:500], freqs[:500])
+    b.update(items[500:], freqs[500:])
+    whole.update(items, freqs)
+    a.merge(b)
+    np.testing.assert_array_equal(a.table_view(), whole.table_view())
+    # mismatched params are rejected, not silently summed
+    other = KernelSketch(spec, jax.random.PRNGKey(2), tile_h=256,
+                         block_b=128, interpret=True)
+    with pytest.raises(ValueError, match="hash params"):
+        a.merge(other)
+    # mismatched table dtypes would silently promote int32 counts to f32
+    fother = KernelSketch(spec, key, tile_h=256, block_b=128,
+                          dtype=jnp.float32, interpret=True)
+    with pytest.raises(ValueError, match="dtype"):
+        a.merge(fother)
+
+
+def test_hierarchy_conservative_tables_dominated_by_linear():
+    base = sk.mod_sketch_spec(_SCHEMA, [(0,), (1,)], (32, 32), 2)
+    hspec = hh.HierarchySpec.from_spec(base)
+    rng = np.random.default_rng(4)
+    items, freqs = _zipfish_stream(rng, 2000)
+    key = jax.random.PRNGKey(2)
+    lin = hh.init_hierarchy(hspec, key)
+    cons = hh.init_hierarchy(hspec, key)
+    lin = hh.update_jit(hspec, lin, jnp.asarray(items), jnp.asarray(freqs))
+    cons = hh.update_conservative_jit(hspec, cons, jnp.asarray(items),
+                                      jnp.asarray(freqs))
+    for sl, sc in zip(lin.states, cons.states):
+        assert (np.asarray(sc.table) <= np.asarray(sl.table)).all()
+        assert np.asarray(sc.table).sum() > 0
+
+
+def test_endpoint_conservative_is_single_shard():
+    """Acceptance: the serving endpoint rejects conservative mode when
+    sharded (merge_from, both directions) but serves top-k normally."""
+    spec = sk.mod_sketch_spec(_SCHEMA, [(0,), (1,)], (64, 64), 3)
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(5)
+    items, freqs = _zipfish_stream(rng, 2000)
+
+    cons = SketchTopKEndpoint(spec, key, mode="conservative")
+    lin = SketchTopKEndpoint(spec, key)
+    cons.ingest(items, freqs)
+    lin.ingest(items, freqs)
+    with pytest.raises(ValueError, match="linear endpoints"):
+        cons.merge_from(lin)
+    with pytest.raises(ValueError, match="linear endpoints"):
+        lin.merge_from(cons)
+    with pytest.raises(ValueError, match="non-negative"):
+        cons.ingest(items[:4], np.array([1, -1, 1, 1]))
+    with pytest.raises(ValueError, match="table range"):
+        cons.ingest(items[:4], np.full(4, 1 << 31, np.int64))
+    with pytest.raises(ValueError, match="mode"):
+        SketchTopKEndpoint(spec, key, mode="nope")
+
+    ti, te = cons.topk(5, min_threshold=1)
+    li, le = lin.topk(5, min_threshold=1)
+    assert ti.shape == (5, 2)
+    # conservative estimates of the reported head never exceed linear's
+    assert te.sum() <= le.sum()
+    # and the true heaviest key is still ranked first
+    tf = _true_freqs(items, freqs)
+    top_true = items[np.argmax(tf)]
+    assert tuple(ti[0]) == tuple(top_true)

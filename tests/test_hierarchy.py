@@ -224,26 +224,42 @@ def test_int64_tables_route_to_dtype_preserving_path():
     assert "int64 ok" in out.stdout
 
 
-def test_endpoint_pool_admission_is_append_only():
-    """Admitted candidate values are never evicted by later ingests, even
-    when lexicographically-smaller values arrive after the pool fills."""
+def test_endpoint_pool_admission_space_saving():
+    """Space-saving admission (core/summary.py): heavy group values enter
+    the candidate pools regardless of arrival order -- early heavies
+    survive a flood of light values, and late heavies evict light entries
+    instead of being dropped at the cap (the old append-only behaviour)."""
     schema = KeySchema(domains=(1 << 32, 1 << 32))
     spec = sk.mod_sketch_spec(schema, [(0,), (1,)], (16, 16), 2)
     ep = SketchTopKEndpoint(spec, jax.random.PRNGKey(0),
                             max_candidates_per_group=8)
     big = np.full((6, 2), 0xFFFF0000, np.uint32) + np.arange(6, dtype=np.uint32)[:, None]
     ep.ingest(big, np.full(6, 100, np.int64))
-    # flood with smaller values than the admitted ones
+    # flood with light values: heavies must not be evicted
     small = np.arange(40, dtype=np.uint32).reshape(20, 2)
     ep.ingest(small, np.ones(20, np.int64))
-    for pool in ep._pools:
-        assert pool.shape[0] == 8  # filled to cap, not resorted past it
-        admitted = {int(v) for v in pool[:, 0]}
-        assert {int(v) for v in big[:, 0]} <= admitted
-    # the early heavy keys stay reportable
+    for j, cand in enumerate(ep.candidates()):
+        assert len(ep._pools[j]) == 8  # at capacity
+        assert {int(v) for v in big[:, j]} <= {int(v) for v in cand[:, 0]}
     items, _ = ep.heavy_hitters(100)
     got = {tuple(r) for r in items.tolist()}
     assert {tuple(r) for r in big.tolist()} <= got
+
+    # reverse order: pools full of light values, then late-arriving heavies
+    ep2 = SketchTopKEndpoint(spec, jax.random.PRNGKey(0),
+                             max_candidates_per_group=8)
+    ep2.ingest(small, np.ones(20, np.int64))
+    late = np.full((4, 2), 0xAAAA0000, np.uint32) + np.arange(4, dtype=np.uint32)[:, None]
+    ep2.ingest(late, np.full(4, 500, np.int64))
+    items2, est2 = ep2.heavy_hitters(400)
+    got2 = {tuple(r) for r in items2.tolist()}
+    assert {tuple(r) for r in late.tolist()} <= got2  # old code dropped these
+
+    # merged shards keep heavy values from both sides within the cap
+    ep.merge_from(ep2)
+    items3, _ = ep.heavy_hitters(400)
+    got3 = {tuple(r) for r in items3.tolist()}
+    assert {tuple(r) for r in late.tolist()} <= got3
 
 
 def test_topk_endpoint_ranks_head():

@@ -76,6 +76,168 @@ def test_update_parity_float32(name, spec, tile_h):
                                np.asarray(core.table), rtol=1e-5, atol=1e-4)
 
 
+def _conservative_reference(spec, params, items, freqs, dtype):
+    core = sk.SketchState(
+        params=params,
+        table=jnp.zeros((spec.width, spec.table_size), dtype))
+    return sk.update_conservative(spec, core, jnp.asarray(items),
+                                  jnp.asarray(freqs))
+
+
+@pytest.mark.parametrize("name,spec,tile_h", _spec_cases())
+def test_conservative_parity_int32(name, spec, tile_h):
+    """Acceptance: conservative Pallas kernel bit-exact vs
+    core.sketch.update_conservative, with duplicate keys inside one block
+    (the sequential-dependence case) and non-tile-multiple widths."""
+    rng = np.random.default_rng(abs(hash(name + "cons")) % 2**32)
+    assert spec.table_size % tile_h != 0, "case must exercise padding"
+    ks = KernelSketch(spec, jax.random.PRNGKey(7), tile_h=tile_h,
+                      block_b=128, interpret=True, mode="conservative")
+    items, freqs = _stream_for(spec, rng, 500)
+    items[40:90] = items[0]       # heavy duplication inside block 0
+    items[130:140] = items[129]   # ... and across the block-1 boundary
+    ks.update(items, freqs)
+
+    core = _conservative_reference(spec, ks.params, items, freqs, jnp.int32)
+    np.testing.assert_array_equal(ks.table_view(), np.asarray(core.table))
+    q = items[rng.choice(len(items), 97, replace=False)]
+    np.testing.assert_array_equal(
+        ks.query(q), np.asarray(sk.query_jit(spec, core, jnp.asarray(q))))
+
+
+def test_conservative_parity_float32_bit_exact():
+    """No MXU contraction in the conservative kernel => f32 is bit-exact
+    too (gather/min/add/max in reference order), unlike the linear kernel's
+    tolerance-based f32 parity."""
+    spec = sk.mod_sketch_spec(_SCHEMA, [(0,), (1,)], (48, 90), 4)
+    rng = np.random.default_rng(1)
+    items, _ = _stream_for(spec, rng, 300)
+    items[50:80] = items[49]
+    vals = (rng.standard_normal(300).astype(np.float32) ** 2)  # >= 0
+    ks = KernelSketch(spec, jax.random.PRNGKey(9), tile_h=512, block_b=128,
+                      dtype=jnp.float32, interpret=True, mode="conservative")
+    ks.update(items, vals)
+    core = _conservative_reference(spec, ks.params, items, vals, jnp.float32)
+    np.testing.assert_array_equal(ks.table_view(), np.asarray(core.table))
+
+
+def test_conservative_chunked_b_variant_matches():
+    """Small VMEM budget => chunk_b < B (chunked-B grid); same result."""
+    from repro.kernels.hashes import make_plan
+    from repro.kernels.sketch_update import padded_table_size
+    from repro.kernels.sketch_update_conservative import (
+        conservative_chunk_b,
+        sketch_update_conservative_pallas,
+    )
+
+    spec = sk.mod_sketch_spec(_SCHEMA, [(0,), (1,)], (100, 41), 2)
+    plan = make_plan(spec)
+    params = sk.init_params(spec, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(2)
+    items, freqs = _stream_for(spec, rng, 256)
+    items[10:60] = items[9]
+    chunks = spec.schema.module_chunks(jnp.asarray(items))
+    h_pad = padded_table_size(spec.table_size, 128)
+    t0 = jnp.zeros((spec.width, h_pad), jnp.int32)
+
+    table_bytes = 2 * spec.width * h_pad * 4
+    tight = table_bytes + 4 * 64 * (chunks.shape[1] * 4 + 4)
+    chunk = conservative_chunk_b(256, chunks.shape[1], spec.width, h_pad, 4,
+                                 vmem_limit_bytes=tight)
+    assert 1 <= chunk < 256, chunk
+    got = sketch_update_conservative_pallas(
+        plan, t0, chunks, jnp.asarray(freqs), params.q, params.r,
+        chunk_b=chunk, interpret=True)
+    full = sketch_update_conservative_pallas(
+        plan, t0, chunks, jnp.asarray(freqs), params.q, params.r,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(full))
+    # table alone over budget => no chunk fits; wrapper takes reference path
+    assert conservative_chunk_b(256, chunks.shape[1], spec.width, h_pad, 4,
+                                vmem_limit_bytes=table_bytes - 1) is None
+    # regression: non-power-of-two blocks must get a chunk that divides b
+    # (the old halving loop returned e.g. 62 for b=1000 and crashed the
+    # kernel's divisibility check), and a budget that fits the table but
+    # not even one item's inputs must fall back to the reference path
+    for b in (1000, 288, 7):
+        ch = conservative_chunk_b(b, chunks.shape[1], spec.width, h_pad, 4,
+                                  vmem_limit_bytes=tight)
+        assert ch is not None and b % ch == 0, (b, ch)
+    assert conservative_chunk_b(256, chunks.shape[1], spec.width, h_pad, 4,
+                                vmem_limit_bytes=table_bytes + 1) is None
+
+
+def test_conservative_vmem_fallback_reference_path(monkeypatch):
+    """When the table working set exceeds VMEM the wrapper must route to
+    core.sketch.update_conservative, bit-for-bit."""
+    import repro.kernels.ops as ops_mod
+
+    spec = sk.mod_sketch_spec(_SCHEMA, [(0,), (1,)], (48, 90), 4)
+    rng = np.random.default_rng(5)
+    items, freqs = _stream_for(spec, rng, 200)
+    items[20:50] = items[19]
+    monkeypatch.setattr(ops_mod, "conservative_chunk_b",
+                        lambda *a, **k: None)
+    ks = KernelSketch(spec, jax.random.PRNGKey(7), tile_h=512, block_b=128,
+                      interpret=True, mode="conservative")
+    ks.update(items, freqs)
+    core = _conservative_reference(spec, ks.params, items, freqs, jnp.int32)
+    np.testing.assert_array_equal(ks.table_view(), np.asarray(core.table))
+
+
+def test_freq_guard_rejects_negative_and_large_magnitude():
+    """Regression: the old guard only checked max >= 2^24, so negative and
+    large-magnitude-negative frequencies slipped into the 12-bit limb
+    split.  Int tables must reject both; f32 tables keep negatives
+    (gradient sketches)."""
+    spec = sk.mod_sketch_spec(_SCHEMA, [(0,), (1,)], (100, 41), 2)
+    rng = np.random.default_rng(0)
+    items, _ = _stream_for(spec, rng, 8)
+
+    ks = KernelSketch(spec, jax.random.PRNGKey(3), tile_h=128, block_b=8,
+                      interpret=True)
+    with pytest.raises(ValueError, match="negative"):
+        ks.update(items, np.array([1, -1, 1, 1, 1, 1, 1, 1], np.int32))
+    with pytest.raises(ValueError, match="2\\^24"):
+        ks.update(items, np.full(8, -(1 << 30), np.int64))
+    with pytest.raises(ValueError, match="2\\^24"):
+        ks.update(items, np.full(8, 1 << 24, np.int64))
+    assert ks.table_view().max() == 0  # nothing leaked into the table
+
+    # f32 linear: negatives allowed (turnstile / gradient values)
+    ksf = KernelSketch(spec, jax.random.PRNGKey(3), tile_h=128, block_b=8,
+                       dtype=jnp.float32, interpret=True)
+    ksf.update(items, np.array([0.5, -0.5] * 4, np.float32))
+
+    # conservative rejects negatives on any dtype (silent no-op otherwise)
+    for dtype in (jnp.int32, jnp.float32):
+        ksc = KernelSketch(spec, jax.random.PRNGKey(3), tile_h=128, block_b=8,
+                           dtype=dtype, interpret=True, mode="conservative")
+        with pytest.raises(ValueError, match="non-negative"):
+            ksc.update(items, np.array([1, -2] * 4, np.int32))
+
+    # ... but has no limb split, so f >= 2^24 stays valid and bit-exact
+    ksc = KernelSketch(spec, jax.random.PRNGKey(3), tile_h=128, block_b=8,
+                       interpret=True, mode="conservative")
+    big = np.full(8, 1 << 25, np.int64)
+    ksc.update(items, big)
+    core = _conservative_reference(spec, ksc.params, items, big, jnp.int32)
+    np.testing.assert_array_equal(ksc.table_view(), np.asarray(core.table))
+    # values past the int32 table range would wrap negative in the cast and
+    # silently no-op: rejected instead
+    with pytest.raises(ValueError, match="table range"):
+        ksc.update(items, np.full(8, 1 << 31, np.int64))
+
+    # NaN weights would poison every touched f32 cell (query would then
+    # UNDERestimate); the guard must catch them, not just f < 0
+    ksf32c = KernelSketch(spec, jax.random.PRNGKey(3), tile_h=128, block_b=8,
+                          dtype=jnp.float32, interpret=True,
+                          mode="conservative")
+    nan_f = np.array([1.0, 1.0, np.nan, 1.0, 1.0, 1.0, 1.0, 1.0], np.float32)
+    with pytest.raises(ValueError, match="non-negative"):
+        ksf32c.update(items, nan_f)
+
+
 def test_block_padding_is_neutral():
     """Stream length not a multiple of block_b: zero-padded tail items must
     not change any estimate (they hash somewhere but add freq 0)."""

@@ -93,6 +93,29 @@ def test_conservative_update_tighter_but_still_overestimates():
     assert (e_cons <= e_plain + 1e-9).all()
 
 
+def test_equal_ranges_respects_space_budget():
+    """Regression: the round-and-nudge split overshot the budget badly for
+    small h / large n (h=2, n=3 gave prod=8, 4x the allocation).  The
+    floor-root split must stay within h everywhere while still tracking it
+    from below."""
+    for n in (1, 2, 3, 4):
+        for h in list(range(2, 70)) + [127, 128, 1000, 1024, 4096, 360000]:
+            ranges = sk.equal_ranges(h, n)
+            prod = int(np.prod(np.asarray(ranges, dtype=np.int64)))
+            assert len(ranges) == n and min(ranges) >= 1
+            assert prod <= h, (h, n, ranges)
+            assert prod >= max(1, h // 4), (h, n, ranges)  # not degenerate
+    # the motivating case: within budget now (was 8 = 4x over)
+    assert int(np.prod(sk.equal_ranges(2, 3))) <= 2
+    # the well-conditioned points used across the suite are unchanged
+    assert sk.equal_ranges(1100, 2) == (33, 33)
+    assert sk.equal_ranges(4096, 2) == (64, 64)
+    assert sk.equal_ranges(4096, 4) == (8, 8, 8, 8)
+    # a spec built from any grid point is valid (ranges >= 1 covers h < 2^n)
+    spec = sk.equal_sketch_spec(KeySchema(domains=(4, 4, 4)), 2, 3)
+    assert spec.table_size <= 2
+
+
 def test_spec_validation():
     schema = KeySchema(domains=(100, 100))
     with pytest.raises(ValueError):

@@ -1,0 +1,121 @@
+"""Space-saving summary unit tests (core/summary.py)."""
+import numpy as np
+import pytest
+
+from repro.core.summary import SpaceSaving
+
+
+def _rows(*vals):
+    return np.asarray(vals, dtype=np.uint32).reshape(-1, 1)
+
+
+def test_late_heavy_value_evicts_lightest():
+    s = SpaceSaving(capacity=3, n_cols=1)
+    s.offer(_rows(1, 2, 3), np.array([5, 1, 4]))
+    s.offer(_rows(9), np.array([100]))
+    got = set(s.values()[:, 0].tolist())
+    assert got == {1, 3, 9}           # 2 (count 1) evicted
+    # inherited floor keeps the overestimate property
+    assert s.counts()[(9,)] == 101
+
+
+def test_counts_only_overestimate_and_wm_bound():
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 50, size=2000).astype(np.uint32).reshape(-1, 1)
+    freqs = rng.integers(1, 10, size=2000)
+    s = SpaceSaving(capacity=16, n_cols=1)
+    for i in range(0, 2000, 100):
+        s.offer(vals[i : i + 100], freqs[i : i + 100])
+    true = {}
+    for v, f in zip(vals[:, 0].tolist(), freqs.tolist()):
+        true[v] = true.get(v, 0) + int(f)
+    w = sum(true.values())
+    for row, c in s.counts().items():
+        assert c >= true.get(row[0], 0)               # overestimate only
+        assert c - true.get(row[0], 0) <= w / 16 + 1  # inherited error bound
+
+
+def test_fractional_weights_admit():
+    """Regression: int64-truncated totals dropped every sub-1.0 weight, so
+    f32 gradient streams never populated the candidate pools."""
+    s = SpaceSaving(capacity=4, n_cols=1)
+    s.offer(_rows(1, 2, 3), np.array([0.5, 0.9, 0.4], np.float32))
+    assert len(s) == 3
+    assert s.counts()[(2,)] == pytest.approx(0.9)
+    # zero-weight pad rows still stay out
+    s.offer(_rows(7), np.array([0.0]))
+    assert (7,) not in s.counts()
+
+
+def test_merge_absent_rows_get_min_count_floor():
+    """Regression: merge must substitute a full side's min count for absent
+    rows (the mergeable-summaries rule) -- contributing 0 instead broke
+    count(v) >= true(v) for rows evicted on one shard, so a globally heavy
+    value could be out-ranked by light survivors after merge_from."""
+    a = SpaceSaving(capacity=2, n_cols=1)
+    b = SpaceSaving(capacity=2, n_cols=1)
+    # v=7 (weight 10 per shard) is evicted on both shards by weight-12 rows
+    a.offer(_rows(7), np.array([10]))
+    a.offer(_rows(1, 2), np.array([12, 12]))
+    b.offer(_rows(7), np.array([10]))
+    b.offer(_rows(3, 4), np.array([12, 12]))
+    m_a = min(a.counts().values())
+    m_b = min(b.counts().values())
+    a.merge_from(b)
+    # every retained count includes the other side's floor, so it still
+    # upper-bounds the true weight of ANY row, including evicted v=7
+    for row, c in a.counts().items():
+        assert c >= m_a + m_b >= 20  # true(7) = 20 stays dominated
+    # under-capacity sides add no floor (absent there means truly unseen)
+    c2 = SpaceSaving(capacity=4, n_cols=1)
+    c2.offer(_rows(1), np.array([12]))
+    d = SpaceSaving(capacity=3, n_cols=1)
+    d.offer(_rows(8, 9), np.array([5, 6]))
+    d.merge_from(c2)
+    assert d.counts()[(8,)] == 5 and d.counts()[(1,)] == 12
+    e = SpaceSaving(capacity=1, n_cols=1)
+    e.offer(_rows(5), np.array([9]))
+    d2 = SpaceSaving(capacity=3, n_cols=1)
+    d2.offer(_rows(8, 9), np.array([5, 6]))
+    d2.merge_from(e)  # e is full with min 9: rows absent from e get +9
+    assert d2.counts()[(8,)] == 5 + 9 and d2.counts()[(9,)] == 6 + 9
+    assert d2.counts()[(5,)] == 9  # d2 under capacity: no floor from d2
+
+
+def test_merge_keeps_heavy_from_both_shards():
+    a = SpaceSaving(capacity=3, n_cols=1)
+    b = SpaceSaving(capacity=3, n_cols=1)
+    a.offer(_rows(1, 2, 3), np.array([50, 1, 2]))
+    b.offer(_rows(4, 5, 2), np.array([60, 1, 1]))
+    a.merge_from(b)
+    got = set(a.values()[:, 0].tolist())
+    assert {1, 4} <= got and len(a) == 3
+    # eviction after a merge still works (heap rebuilt over merged counts)
+    a.offer(_rows(8), np.array([500]))
+    assert 8 in set(a.values()[:, 0].tolist())
+    with pytest.raises(ValueError, match="widths"):
+        a.merge_from(SpaceSaving(capacity=3, n_cols=2))
+
+
+def test_lazy_heap_stays_bounded():
+    """Regression: repeated increments of resident rows pushed one stale
+    heap entry each and nothing ever drained them under capacity."""
+    s = SpaceSaving(capacity=8, n_cols=1)
+    hot = _rows(1, 2, 3)
+    for _ in range(200):
+        s.offer(hot, np.array([1, 1, 1]))
+    assert len(s._heap) <= 4 * s.capacity
+    assert s.counts()[(1,)] == 200
+    # eviction still finds the true minimum after compactions
+    s.offer(_rows(4, 5, 6, 7, 8), np.ones(5))
+    s.offer(_rows(9), np.array([50]))
+    assert 9 in set(s.values()[:, 0].tolist())
+    assert {1, 2, 3} <= set(s.values()[:, 0].tolist())
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        SpaceSaving(capacity=0, n_cols=1)
+    s = SpaceSaving(capacity=2, n_cols=2)
+    with pytest.raises(ValueError, match="\\[N, 2\\]"):
+        s.offer(np.zeros((3, 1), np.uint32))
