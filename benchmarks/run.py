@@ -27,9 +27,9 @@ def main() -> None:
     import jax
 
     from benchmarks import bounds_check, common, kernel_microbench, paper_figs, \
-        roofline_report
+        roofline_report, sharded_topk_bench
     benches = (paper_figs.ALL + bounds_check.ALL + kernel_microbench.ALL
-               + roofline_report.ALL)
+               + roofline_report.ALL + sharded_topk_bench.ALL)
     print("name,us_per_call,derived")
     t_start = time.time()
     failures = []

@@ -6,8 +6,16 @@ Builds a Zipf edge stream and a bigram token stream, stacks a prefix
 hierarchy of composite-hash sketches over each, and recovers every key
 above a frequency threshold by recursive descent -- comparing the batched
 Pallas candidate kernel against the jnp reference and against exact ground
-truth, then serves top-k through the SketchTopKEndpoint.
+truth, then serves top-k through the SketchTopKEndpoint -- and finally
+through the sharded service, whose output is bit-identical at any shard
+count (the forced 8-device CPU mesh below stands in for real hardware).
 """
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
 import jax
 import numpy as np
 
@@ -67,3 +75,21 @@ overlap = [(c, lin_est[tuple(k)])
 assert overlap and all(c <= l for c, l in overlap), \
     "conservative must be tighter per key"
 print(f"conservative top-10:       {est_cons.tolist()} (<= linear per key)")
+
+# sharded service: the same stream through a 1-shard and a 4-shard mesh
+# (different block splits!) yields bit-identical level tables and top-k --
+# the psum merge of linear tables is exact, so shard count cannot matter
+from repro.serving.sharded_topk import ShardedTopKService
+svc1 = ShardedTopKService(spec, key, jax.make_mesh((1,), ("data",)))
+svc4 = ShardedTopKService(spec, key, jax.make_mesh((4,), ("data",)),
+                          sync_every=2)
+svc1.ingest(wl.stream.items, wl.stream.freqs)
+third = len(wl.stream.items) // 3
+for s, e in ((0, third), (third, 2 * third), (2 * third, None)):
+    svc4.ingest(wl.stream.items[s:e], wl.stream.freqs[s:e])
+for a, b in zip(svc1.state().states, svc4.state().states):
+    assert np.array_equal(np.asarray(a.table), np.asarray(b.table))
+s1_items, s1_est = svc1.topk(10)
+s4_items, s4_est = svc4.topk(10)
+assert np.array_equal(s1_items, s4_items) and np.array_equal(s1_est, s4_est)
+print(f"sharded top-10 (1==4 shards): {s4_est.tolist()}")

@@ -36,6 +36,48 @@ from repro.compat import shard_map
 from repro.core import sketch as sk
 
 
+def require_linear(mode: str, entry: str) -> None:
+    """Refuse conservative tables on any sharded/merge entry point.
+
+    Every distributed path in this repo relies on the table being linear in
+    the stream (psum of shard tables == table of the union stream).
+    Conservative tables (Estan-Varghese) are not, so each sharded entry
+    point calls this guard up front and fails loudly instead of producing a
+    silently wrong merged table.
+    """
+    if mode != "linear":
+        raise ValueError(
+            f"{entry} is only defined for linear sketches (got mode="
+            f"{mode!r}): conservative tables are not linear in the stream, "
+            "so per-shard folds cannot be psum-merged -- conservative mode "
+            "is single-shard by construction")
+
+
+def pad_block_pow2(items: np.ndarray, freqs: np.ndarray, n_shards: int):
+    """Pad a stream block so each of ``n_shards`` contiguous slices has the
+    same power-of-two length.
+
+    Zero-frequency pad rows are no-ops under the linear update and are
+    skipped by the candidate pools, so padding never changes any table --
+    which is what keeps the sharded entry points bit-exact with the serial
+    build.  The power-of-two rounding bounds the jitted fold at O(log B)
+    compiled variants per shard count.  One helper shared by every sharded
+    ingest surface (ShardedTopKService.ingest, KernelSketch.sharded_update,
+    SketchTopKEndpoint.ingest with n_shards=1): the copies must agree for
+    cross-entry-point parity to hold.
+
+    Returns (items, freqs, rows_per_shard).
+    """
+    n = items.shape[0]
+    per = -(-n // n_shards)
+    per = 1 << max(per - 1, 0).bit_length()
+    m = per * n_shards
+    if m != n:
+        items = np.pad(items, ((0, m - n), (0, 0)))
+        freqs = np.pad(freqs, (0, m - n))
+    return items, freqs, per
+
+
 def sharded_build(
     spec: sk.SketchSpec,
     params: sk.SketchParams,
@@ -130,6 +172,52 @@ def merge_local_tables(
     merged = fn(local_tables)
     # every shard now holds the global table; take shard 0's copy
     return merged[0]
+
+
+def lazy_hierarchy_update(
+    hspec,                      # core.hierarchy.HierarchySpec
+    mesh: Mesh,
+    data_axes: Tuple[str, ...],
+    local_tables: Sequence[jax.Array],  # per level: [n_shards, w, h_level]
+    params: Sequence[sk.SketchParams],  # per level
+    items: jax.Array,           # uint32[B, n_modules], B % n_shards == 0
+    freqs: jax.Array,
+    *,
+    mode: str = "linear",
+) -> Tuple[jax.Array, ...]:
+    """Per-level lazy local fold of a hierarchy: no collective on ingest.
+
+    This is :func:`lazy_local_update` lifted to per-level
+    ``HierarchyState`` tables: every shard folds its slice of the stream
+    into its own copy of every level's table, and the psum merge is
+    deferred to the explicit sync point (:func:`merge_local_hierarchy`).
+    Level L sees the stream's columns re-cut to its group prefix
+    (``hspec.level_items``), exactly like the single-device update.
+
+    Only valid for linear tables; the conservative update is excluded from
+    every psum path (see :func:`require_linear`).
+    """
+    require_linear(mode, "lazy_hierarchy_update")
+    items = jnp.asarray(items)
+    new = []
+    for lvl, (spec_l, p_l, tbl_l) in enumerate(
+            zip(hspec.levels, params, local_tables)):
+        new.append(lazy_local_update(
+            spec_l, mesh, data_axes, tbl_l, p_l,
+            hspec.level_items(lvl, items), freqs))
+    return tuple(new)
+
+
+def merge_local_hierarchy(
+    mesh: Mesh, data_axes: Tuple[str, ...],
+    local_tables: Sequence[jax.Array],
+) -> Tuple[jax.Array, ...]:
+    """psum-merge every level's lazily accumulated per-shard tables.
+
+    The sync point of the sharded serving path: returns one replicated
+    [w, h_level] table per level, exact by linearity (integer psum is exact
+    addition, so the result is bit-identical for any shard count)."""
+    return tuple(merge_local_tables(mesh, data_axes, t) for t in local_tables)
 
 
 def row_sharded_query(

@@ -198,14 +198,21 @@ def sharded_hierarchy_build(
     data_axes: Tuple[str, ...],
     items: jax.Array,
     freqs: jax.Array,
+    *,
+    mode: str = "linear",
 ) -> HierarchyState:
     """Distributed build: per-level sharded fold + psum merge (exact).
 
     Reuses core.distributed.sharded_build level by level; every level's
     table is linear, so the psum merge is exact just like the flat case.
+    ``mode`` exists only to be refused: a conservatively built hierarchy
+    (:func:`update_conservative`) has non-linear tables and must never
+    enter a psum, so passing mode="conservative" raises instead of
+    silently producing a wrong merged hierarchy.
     """
     from repro.core import distributed as dist
 
+    dist.require_linear(mode, "sharded_hierarchy_build")
     items = jnp.asarray(items)
     new = []
     for lvl, (spec_l, st_l) in enumerate(zip(hspec.levels, state.states)):

@@ -104,6 +104,26 @@ class SpaceSaving:
     def counts(self) -> Dict[Row, float]:
         return dict(self._count)
 
+    @classmethod
+    def fold(cls, summaries: List["SpaceSaving"]) -> "SpaceSaving":
+        """Fold shard summaries into one fresh summary (cross-shard cascade).
+
+        Capacity and width come from the first summary; each shard is
+        folded in with :meth:`merge_from`, so the result carries the
+        mergeable-summaries guarantees: counts upper-bound true weights and
+        the inherited error is at most the sum of the shards' floors (each
+        <= W_i / m).  When every shard is under capacity the fold is exact
+        -- counts are plain sums and no row is lost -- which is what makes
+        the sharded serving candidate pools shard-count invariant below
+        capacity (serving/sharded_topk.py)."""
+        summaries = list(summaries)
+        if not summaries:
+            raise ValueError("fold requires at least one summary")
+        out = cls(summaries[0].capacity, summaries[0].n_cols)
+        for s in summaries:
+            out.merge_from(s)
+        return out
+
     def merge_from(self, other: "SpaceSaving") -> None:
         """Fold another summary in (cross-shard candidate merge).
 

@@ -7,7 +7,7 @@ from repro.kernels.hier_query import (  # noqa: F401
     hier_candidate_query,
     hier_candidate_query_ref,
 )
-from repro.kernels.ops import KernelSketch  # noqa: F401
+from repro.kernels.ops import KernelSketch, default_interpret  # noqa: F401
 from repro.kernels.sketch_update_conservative import (  # noqa: F401
     sketch_update_conservative_pallas,
 )

@@ -65,6 +65,7 @@ class KernelSketch:
         self.table = jnp.zeros((spec.width, self.h_pad), dtype=dtype)
         self.interpret = default_interpret() if interpret is None else interpret
         self.mode = mode
+        self._sharded_folds: dict = {}  # (mesh, data_axes) -> jitted fold
 
     # -- stream ops ---------------------------------------------------------
     def _check_freqs(self, freqs: np.ndarray) -> None:
@@ -146,6 +147,43 @@ class KernelSketch:
             tile_h=self.tile_h, interpret=self.interpret,
         )
         return np.asarray(est)
+
+    def sharded_update(self, mesh, data_axes, items, freqs) -> None:
+        """Distributed fold: shard the block over ``data_axes``, psum-merge
+        the per-device deltas, add to the table.  Linear mode only -- the
+        conservative table is not linear in the stream, so sharded folds of
+        it cannot be psum-merged (core.distributed.require_linear).
+
+        Inside shard_map each device runs the jnp reference fold (the
+        Pallas one-hot kernel is a per-device drop-in on TPU; off-TPU the
+        interpret path inside a shard_map would be pure overhead), which is
+        bit-identical to the kernel by the parity tests.  The jitted fold
+        is cached per (mesh, data_axes) and the per-shard row count padded
+        to the next power of two: an eager shard_map re-traces on every
+        call, which would dominate streaming ingest (same fix as
+        ShardedTopKService's cached wrappers).
+        """
+        from repro.core import distributed as dist
+
+        dist.require_linear(self.mode, "KernelSketch.sharded_update")
+        items = np.asarray(items, dtype=np.uint32)
+        freqs = np.asarray(freqs)
+        # no _check_freqs here: the limb-split bounds only constrain the
+        # Pallas kernel path, and this fold runs the exact jnp reference
+        # inside shard_map (turnstile / large-weight streams are fine)
+        n_shards = int(np.prod([mesh.shape[a] for a in data_axes],
+                               dtype=np.int64))
+        items, freqs, _ = dist.pad_block_pow2(items, freqs, n_shards)
+        cache_key = (mesh, tuple(data_axes))
+        fold = self._sharded_folds.get(cache_key)
+        if fold is None:
+            fold = jax.jit(lambda it, fr: dist.sharded_build(
+                self.spec, self.params, mesh, tuple(data_axes), it, fr,
+                table_dtype=self.table.dtype))
+            self._sharded_folds[cache_key] = fold
+        delta = fold(jnp.asarray(items), jnp.asarray(freqs))
+        h = self.spec.table_size
+        self.table = self.table.at[:, :h].add(delta)
 
     # -- interop ------------------------------------------------------------
     def merge(self, other: "KernelSketch") -> None:

@@ -35,7 +35,8 @@ from repro import hlo_analysis as ha
 from repro import roofline as rl
 from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
 from repro.launch import specs as sp
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, make_test_mesh, \
+    sketch_data_axes
 from repro.models import shard_ctx
 from repro.models import sharding as shd
 from repro.models import transformer as tfm
@@ -90,6 +91,22 @@ def _apply_variant(cfg, variant: str):
 
 def _replicated_like(tree):
     return jax.tree.map(lambda _: P(), tree)
+
+
+def _compiled_stats(compiled):
+    """cost_analysis / memory_analysis / optimized HLO of a compiled cell
+    (shared by the model cells and the sketch-serving cells)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    mem_d: Dict[str, float] = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if mem is not None and hasattr(mem, attr):
+            mem_d[attr] = float(getattr(mem, attr))
+    return cost, mem_d, compiled.as_text()
 
 
 def lower_cell(
@@ -184,17 +201,7 @@ def lower_cell(
     compiled = lowered.compile()
     t_compile = time.perf_counter() - t0
 
-    cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):
-        cost = cost[0]
-    mem = compiled.memory_analysis()
-    mem_d: Dict[str, float] = {}
-    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
-                 "temp_size_in_bytes", "generated_code_size_in_bytes",
-                 "alias_size_in_bytes"):
-        if mem is not None and hasattr(mem, attr):
-            mem_d[attr] = float(getattr(mem, attr))
-    hlo = compiled.as_text()
+    cost, mem_d, hlo = _compiled_stats(compiled)
     model_flops = rl.model_flops_for(cfg, kind, b, s)
     hcost = ha.analyze(hlo)  # loop-aware: scan bodies x trip counts
     top_bytes = dict(sorted(hcost.bytes_by_op.items(),
@@ -271,6 +278,138 @@ def run_cells(archs, shapes, meshes, variant: str, skip_existing: bool = True):
     return summary
 
 
+# --------------------------------------------------------------------------
+# Sketch-serving cells: the sharded heavy-hitter pipeline lowered on the
+# production meshes (and the CI-scale test mesh), alongside the model cells.
+# Three lowered units cover the ShardedTopKService data path
+# (serving/sharded_topk.py):
+#   sketch_ingest -- per-shard lazy fold of one stream block into every
+#                    hierarchy level (no collective; the ingest hot path),
+#   sketch_sync   -- the explicit psum sync point merging the per-shard
+#                    level tables (the only collective in the pipeline),
+#   sketch_build  -- synchronous fold + psum in one program
+#                    (core.hierarchy.sharded_hierarchy_build).
+# The descent itself is a host-driven loop over batched queries and is
+# exercised by tests/benchmarks, not lowered as one XLA program.
+# --------------------------------------------------------------------------
+
+SKETCH_CELLS = ("sketch_ingest", "sketch_sync", "sketch_build")
+SKETCH_MESHES = ("pod16x16", "pod2x16x16", "test2x2")
+SKETCH_BATCH = 1 << 20          # rows per ingested block (global)
+
+
+def _sketch_mesh(mesh_kind: str):
+    if mesh_kind == "test2x2":
+        return make_test_mesh()
+    return make_production_mesh(multi_pod=(mesh_kind == "pod2x16x16"))
+
+
+def lower_sketch_cell(cell: str, mesh_kind: str,
+                      batch: int = SKETCH_BATCH) -> Dict[str, Any]:
+    from repro.core import distributed as dist
+    from repro.core import hierarchy as hhm
+    from repro.core import sketch as sks
+    from repro.core.hashing import KeySchema
+
+    mesh = _sketch_mesh(mesh_kind)
+    data_axes = sketch_data_axes(mesh)
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+    b = max(batch // n_shards, 1) * n_shards
+
+    # telemetry-shaped keys: two 32-bit modules (edge / routed-token pairs)
+    schema = KeySchema(domains=(1 << 32, 1 << 32))
+    base = sks.mod_sketch_spec(schema, [(0,), (1,)], (512, 512), 4)
+    hspec = hhm.HierarchySpec.from_spec(base)
+    state = hhm.init_hierarchy(hspec, jax.random.PRNGKey(0))
+    params = tuple(st.params for st in state.states)
+    local_sds = tuple(
+        jax.ShapeDtypeStruct((n_shards,) + st.table.shape, st.table.dtype)
+        for st in state.states)
+    items_sds = jax.ShapeDtypeStruct((b, 2), jnp.uint32)
+    freqs_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    t0 = time.perf_counter()
+    if cell == "sketch_ingest":
+        fn = jax.jit(lambda local, it, fr: dist.lazy_hierarchy_update(
+            hspec, mesh, data_axes, local, params, it, fr))
+        lowered = fn.lower(local_sds, items_sds, freqs_sds)
+    elif cell == "sketch_sync":
+        fn = jax.jit(lambda local: dist.merge_local_hierarchy(
+            mesh, data_axes, local))
+        lowered = fn.lower(local_sds)
+    elif cell == "sketch_build":
+        fn = jax.jit(lambda st_, it, fr: hhm.sharded_hierarchy_build(
+            hspec, st_, mesh, data_axes, it, fr))
+        state_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        lowered = fn.lower(state_sds, items_sds, freqs_sds)
+    else:
+        raise ValueError(f"unknown sketch cell {cell!r}")
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    cost, mem_d, hlo = _compiled_stats(compiled)
+    hcost = ha.analyze(hlo)
+    return {
+        "cell": cell,
+        "mesh": mesh_kind,
+        "chips": mesh.size,
+        "n_shards": n_shards,
+        "data_axes": list(data_axes),
+        "batch": b,
+        "levels": hspec.n_levels,
+        "table_cells": hspec.table_cells,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "flops_per_chip": hcost.flops,
+        "hbm_bytes_per_chip": hcost.bytes,
+        "collectives": {"counts": hcost.coll_counts,
+                        "result_bytes": hcost.coll_bytes,
+                        "wire_bytes": hcost.coll_wire_bytes},
+        "memory_analysis": mem_d,
+        "cost_flops": float(cost.get("flops", 0.0)),
+        "cost_bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+
+
+def sketch_cell_path(cell: str, mesh_kind: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"sketch__{cell}__{mesh_kind}.json")
+
+
+def run_sketch_cells(skip_existing: bool = True):
+    summary = []
+    for mesh_kind in SKETCH_MESHES:
+        for cell in SKETCH_CELLS:
+            path = sketch_cell_path(cell, mesh_kind)
+            if skip_existing and os.path.exists(path):
+                print(f"HAVE {cell} x {mesh_kind}", flush=True)
+                continue
+            print(f"CELL {cell} x {mesh_kind} ...", flush=True)
+            try:
+                res = lower_sketch_cell(cell, mesh_kind)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                coll = res["collectives"]["counts"]
+                print(f"  ok: compile={res['compile_s']:.1f}s "
+                      f"shards={res['n_shards']} collectives={coll} "
+                      f"mem={res['memory_analysis']}", flush=True)
+                summary.append(res)
+            except Exception as e:
+                err = {"cell": cell, "mesh": mesh_kind, "error": str(e),
+                       "traceback": traceback.format_exc()}
+                with open(path + ".err", "w") as f:
+                    json.dump(err, f, indent=1)
+                print(f"  FAIL: {type(e).__name__}: {str(e)[:300]}",
+                      flush=True)
+    return summary
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -280,6 +419,10 @@ def main() -> None:
     ap.add_argument("--multi-pod-only", action="store_true")
     ap.add_argument("--single-pod-only", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--sketch-cells", action="store_true",
+                    help="lower the sharded sketch-serving cells "
+                         "(ingest/sync/build on every mesh) instead of the "
+                         "model cells")
     args = ap.parse_args()
 
     try:  # persistent compilation cache speeds up resumed sweeps
@@ -287,6 +430,10 @@ def main() -> None:
         jax.config.update("jax_persistent_cache_min_compile_time_secs", 10)
     except Exception:
         pass
+
+    if args.sketch_cells:
+        run_sketch_cells(skip_existing=not args.force)
+        return
 
     archs = ARCHS if args.all or not args.arch else [args.arch]
     shapes = list(SHAPES) if args.all or not args.shape else [args.shape]

@@ -19,3 +19,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-scale tests (requires >= prod(shape) devices)."""
     return jax.make_mesh(shape, axes)
+
+
+def sketch_data_axes(mesh) -> tuple:
+    """Data-parallel axes for sketch serving on any of the meshes above.
+
+    Sketch ingest shards the *stream*, never the table rows, so every axis
+    except "model" is a data axis: ("data",) on the single pod / test mesh,
+    ("pod", "data") on the two-pod mesh.  Used by the sharded serving
+    dry-run cells and ShardedTopKService's default."""
+    return tuple(a for a in mesh.axis_names if a != "model")

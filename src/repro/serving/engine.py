@@ -188,11 +188,8 @@ class SketchTopKEndpoint:
         # pad blocks to the next power of two so the jitted multi-level
         # update compiles O(log B) variants, not one per block length
         # (zero-frequency pad items are no-ops and stay out of the pools)
-        n = items.shape[0]
-        m = 1 << (n - 1).bit_length()
-        if m != n:
-            items = np.pad(items, ((0, m - n), (0, 0)))
-            freqs = np.pad(freqs, (0, m - n))
+        from repro.core.distributed import pad_block_pow2
+        items, freqs, _ = pad_block_pow2(items, freqs, 1)
         fold = (self._hh.update_conservative_jit
                 if self.mode == "conservative" else self._hh.update_jit)
         self.state = fold(self.hspec, self.state, jnp.asarray(items),
@@ -215,27 +212,50 @@ class SketchTopKEndpoint:
              min_threshold: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k by estimate: geometric threshold descent until k found.
 
-        ``min_threshold`` floors the descent; the default scales with the
-        stream (total / 2^17) because at threshold ~1 every candidate
-        survives every level and the leaf evaluates the full candidate
-        cross-product -- exactly the blowup the hierarchy avoids.  Pass
-        ``min_threshold=1`` explicitly to force exhaustive descent on
-        small candidate pools.
+        See :func:`repro.serving.sharded_topk.threshold_descent_topk` (the
+        descent is shared with the sharded service) for the
+        ``min_threshold`` semantics.  Candidates are hoisted: the pools
+        don't change mid-descent.
         """
-        if min_threshold is None:
-            min_threshold = max(1, self.total >> 17)
-        thr = max(self.total, 1)
-        items = np.zeros((0, self.hspec.base.schema.modularity), np.uint32)
-        est = np.zeros((0,), np.int64)
-        cands = self.candidates()  # hoisted: pools don't change mid-descent
-        while thr >= min_threshold:
-            items, est = self.heavy_hitters(thr, candidates=cands)
-            if len(est) >= k:
-                break
-            if thr == min_threshold:
-                break
-            thr = max(min_threshold, thr // 4)
-        return items[:k], est[:k]
+        from repro.serving.sharded_topk import threshold_descent_topk
+
+        return threshold_descent_topk(
+            self.heavy_hitters, self.candidates(), k, total=self.total,
+            n_modules=self.hspec.base.schema.modularity,
+            min_threshold=min_threshold)
+
+    def to_sharded(self, mesh, *, data_axes=None,
+                   sync_every: Optional[int] = 1,
+                   ) -> "object":
+        """Promote this single-shard endpoint to a ShardedTopKService.
+
+        Carries over the hierarchy tables, hash params, candidate pools,
+        and stream total; subsequent ingest runs sharded over the mesh.
+        Linear endpoints only: a conservative endpoint's tables are not
+        linear in the stream and must never enter the psum sync path, so
+        promotion is refused (same contract as merge_from).
+        """
+        from repro.core.summary import SpaceSaving
+        from repro.serving.sharded_topk import ShardedTopKService
+
+        if self.mode != "linear":
+            raise ValueError(
+                "to_sharded is only defined for linear endpoints: "
+                "conservative tables cannot be psum-merged, so a "
+                "conservative endpoint must stay single-shard")
+        svc = ShardedTopKService(
+            self.hspec.base, jax.random.PRNGKey(0), mesh,
+            data_axes=data_axes,
+            max_candidates_per_group=self.max_candidates,
+            sync_every=sync_every, use_kernel=self.use_kernel,
+            dtype=self.state.states[0].table.dtype)
+        # the service's freshly drawn params are discarded: the promoted
+        # state keeps this endpoint's params so existing tables stay valid
+        svc.merged = self.state
+        svc.total = self.total
+        svc._shard_pools[0] = [SpaceSaving.fold([p]) for p in self._pools]
+        svc._global_pools = [SpaceSaving.fold([p]) for p in self._pools]
+        return svc
 
     def merge_from(self, other: "SketchTopKEndpoint") -> None:
         """Fold another endpoint's sketch + pools in (cross-shard merge).

@@ -1,0 +1,254 @@
+"""Sharded heavy-hitter serving on multi-device meshes.
+
+:class:`ShardedTopKService` runs the full hierarchical heavy-hitter
+pipeline (core/hierarchy.py) on a data-parallel device mesh:
+
+  ingest   the stream block is split over the mesh's data axes and every
+           shard folds its slice into per-level *local* tables
+           (core.distributed.lazy_hierarchy_update -- no collective on the
+           ingest hot path), while per-shard space-saving pools
+           (core/summary.py) admit candidate group values;
+  sync     at explicit sync points the local tables are psum-merged per
+           level (core.distributed.merge_local_hierarchy -- exact by
+           linearity) into the serving snapshot, and the shard pools fold
+           into global pools with the mergeable-summaries rule
+           (SpaceSaving.fold);
+  query    ``heavy_hitters`` / ``topk`` run the recursive descent
+           (core.hierarchy.find_heavy_hitters, optionally the Pallas
+           candidate kernel kernels/hier_query.py) against the merged
+           level tables.
+
+Shard-count invariance: every level table is linear in the stream and
+integer addition is exact and order-free, so the merged tables -- and with
+them the query output -- are *bit-identical* for any shard count and any
+split of the same stream (1, 2, 4 and 8 shards all agree; enforced by
+tests/test_sharded_topk.py).  The candidate pools stay invariant as long
+as they are under capacity (the fold is then an exact union); the
+service's ``candidates()`` sorts rows lexicographically so the descent
+order never depends on pool iteration order.
+
+Conservative tables are non-linear and cannot psum: the service refuses
+``mode="conservative"`` at construction, as do the underlying distributed
+entry points (core.distributed.require_linear) and the single-shard
+endpoint's :meth:`~repro.serving.engine.SketchTopKEndpoint.to_sharded`
+promotion.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed as dist
+from repro.core import hierarchy as hh
+from repro.core import sketch as sk
+from repro.core.summary import SpaceSaving
+
+
+def threshold_descent_topk(
+    heavy_hitters_fn: Callable[..., Tuple[np.ndarray, np.ndarray]],
+    candidates: Sequence[np.ndarray],
+    k: int,
+    *,
+    total: int,
+    n_modules: int,
+    min_threshold: Optional[int] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k by estimate: geometric threshold descent until k keys found.
+
+    Shared by SketchTopKEndpoint.topk and ShardedTopKService.topk.
+    ``min_threshold`` floors the descent; the default scales with the
+    stream (total / 2^17) because at threshold ~1 every candidate survives
+    every level and the leaf evaluates the full candidate cross-product --
+    exactly the blowup the hierarchy avoids.  Pass ``min_threshold=1``
+    explicitly to force exhaustive descent on small candidate pools.
+    """
+    if min_threshold is None:
+        min_threshold = max(1, total >> 17)
+    thr = max(total, 1)
+    items = np.zeros((0, n_modules), np.uint32)
+    est = np.zeros((0,), np.int64)
+    while thr >= min_threshold:
+        items, est = heavy_hitters_fn(thr, candidates=candidates)
+        if len(est) >= k or thr == min_threshold:
+            break
+        thr = max(min_threshold, thr // 4)
+    return items[:k], est[:k]
+
+
+class ShardedTopKService:
+    """Heavy-hitter / top-k serving over a data-parallel device mesh.
+
+    One service instance owns the whole mesh: ``n_shards`` is the product
+    of the ``data_axes`` sizes, each shard ingesting a contiguous slice of
+    every block.  Hash params are drawn once from ``key`` (all shards and
+    all shard counts share them -- cell-wise sums of differently hashed
+    tables would be garbage), so two services built from the same spec and
+    key are merge-compatible snapshots of each other.
+
+    ``sync_every`` controls the psum cadence: the merge all-reduce runs
+    after that many ingested blocks (1 = synchronous, the sharded_build
+    shape).  Pass ``sync_every=None`` for fully manual sync points; any
+    query forces a sync first, so results are never stale.
+    """
+
+    def __init__(self, base_spec: sk.SketchSpec, key: jax.Array, mesh, *,
+                 data_axes: Optional[Tuple[str, ...]] = None,
+                 max_candidates_per_group: int = 1 << 16,
+                 sync_every: Optional[int] = 1,
+                 use_kernel: bool = False, dtype=jnp.int32,
+                 mode: str = "linear"):
+        dist.require_linear(mode, "ShardedTopKService")
+        from repro.launch.mesh import sketch_data_axes
+
+        self.mode = mode
+        self.mesh = mesh
+        if data_axes is None:
+            data_axes = sketch_data_axes(mesh)
+        self.data_axes = tuple(data_axes)
+        self.n_shards = int(np.prod([mesh.shape[a] for a in self.data_axes],
+                                    dtype=np.int64))
+        self.hspec = hh.HierarchySpec.from_spec(base_spec)
+        self.merged = hh.init_hierarchy(self.hspec, key, dtype=dtype)
+        self._local = tuple(
+            jnp.zeros((self.n_shards,) + st.table.shape, dtype=dtype)
+            for st in self.merged.states)
+        self.max_candidates = int(max_candidates_per_group)
+        self.use_kernel = use_kernel
+        self.sync_every = sync_every
+        self.total = 0
+        self._blocks_since_sync = 0
+        self._dirty = False
+        self._pools_dirty = False
+        self._shard_pools: List[List[SpaceSaving]] = [
+            [SpaceSaving(self.max_candidates, len(g))
+             for g in base_spec.partition]
+            for _ in range(self.n_shards)
+        ]
+        self._global_pools: List[SpaceSaving] = [
+            SpaceSaving(self.max_candidates, len(g))
+            for g in base_spec.partition
+        ]
+        # jit wrappers cached per service: an eager shard_map re-traces on
+        # every call, which would dominate the ingest hot path.  Params are
+        # dynamic args (not closed over) so a promoted endpoint's params
+        # (to_sharded swaps self.merged) hit the same compiled executable.
+        self._fold = jax.jit(
+            lambda local, params, it, fr: dist.lazy_hierarchy_update(
+                self.hspec, self.mesh, self.data_axes, local, params,
+                it, fr))
+        self._merge = jax.jit(
+            lambda local: dist.merge_local_hierarchy(
+                self.mesh, self.data_axes, local))
+
+    # -- ingest (per-shard lazy fold, no collective) ------------------------
+
+    def ingest(self, items: np.ndarray,
+               freqs: Optional[np.ndarray] = None) -> None:
+        """Fold a weighted key block, sharded over the mesh's data axes.
+
+        The block is padded so every shard sees the same power-of-two row
+        count (zero-frequency pad rows are no-ops in the linear update and
+        are skipped by the pools), then each shard folds its contiguous
+        slice into its local per-level tables -- no collective until the
+        next sync point.
+        """
+        items = np.asarray(items, dtype=np.uint32)
+        if items.shape[0] == 0:
+            return
+        if freqs is None:
+            freqs = np.ones(items.shape[0], dtype=np.int64)
+        freqs = np.asarray(freqs)
+        self.total += int(freqs.sum())
+        items, freqs, per = dist.pad_block_pow2(items, freqs, self.n_shards)
+        for s in range(self.n_shards):
+            sl = slice(s * per, (s + 1) * per)
+            for j, g in enumerate(self.hspec.base.partition):
+                self._shard_pools[s][j].offer(items[sl][:, list(g)],
+                                              freqs[sl])
+        params = tuple(st.params for st in self.merged.states)
+        self._local = self._fold(self._local, params, jnp.asarray(items),
+                                 jnp.asarray(freqs))
+        self._dirty = True
+        self._pools_dirty = True
+        self._blocks_since_sync += 1
+        if self.sync_every and self._blocks_since_sync >= self.sync_every:
+            self.sync()
+
+    # -- sync (explicit psum point) -----------------------------------------
+
+    def sync(self) -> None:
+        """psum-merge local deltas into the serving snapshot.
+
+        Tables: per-level all-reduce of the lazily accumulated local
+        tables, folded into ``merged`` and reset (exact by linearity).
+        The candidate-pool fold is deferred to the first query that reads
+        ``candidates()`` -- the fold is pure host-side dict work with no
+        collective, so paying it per sync (per block at sync_every=1)
+        would burden the ingest hot path for nothing.
+        """
+        if not self._dirty:
+            return
+        deltas = self._merge(self._local)
+        self.merged = hh.HierarchyState(states=tuple(
+            sk.SketchState(params=st.params, table=st.table + d)
+            for st, d in zip(self.merged.states, deltas)))
+        self._local = tuple(jnp.zeros_like(t) for t in self._local)
+        self._dirty = False
+        self._blocks_since_sync = 0
+
+    def _ensure_synced(self) -> None:
+        if self._dirty:
+            self.sync()
+
+    # -- queries (descent against the merged level tables) ------------------
+
+    def state(self) -> hh.HierarchyState:
+        """The merged (serving-snapshot) hierarchy state."""
+        self._ensure_synced()
+        return self.merged
+
+    def candidates(self) -> List[np.ndarray]:
+        """Per-group candidate arrays from the folded global pools.
+
+        Rows are sorted lexicographically (np.unique) so the descent --
+        and hence top-k tie order -- never depends on the dict iteration
+        order of the folded pools, which varies with shard count.  The
+        global pools are (re-)folded here from the cumulative shard pools
+        with the mergeable-summaries rule when ingest has run since the
+        last fold; recomputing from scratch avoids compounding fold floors
+        fold over fold.
+        """
+        self._ensure_synced()
+        if self._pools_dirty:
+            self._global_pools = [
+                SpaceSaving.fold([pools[j] for pools in self._shard_pools])
+                for j in range(len(self._global_pools))
+            ]
+            self._pools_dirty = False
+        out = []
+        for p in self._global_pools:
+            vals = p.values()
+            out.append(np.unique(vals, axis=0) if len(vals) else vals)
+        return out
+
+    def heavy_hitters(self, threshold: int,
+                      candidates: Optional[List[np.ndarray]] = None,
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Every key estimated >= threshold, from the merged tables."""
+        self._ensure_synced()
+        if candidates is None:
+            candidates = self.candidates()
+        return hh.find_heavy_hitters(
+            self.hspec, self.merged, threshold, candidates,
+            use_kernel=self.use_kernel)
+
+    def topk(self, k: int, min_threshold: Optional[int] = None,
+             ) -> Tuple[np.ndarray, np.ndarray]:
+        self._ensure_synced()
+        return threshold_descent_topk(
+            self.heavy_hitters, self.candidates(), k, total=self.total,
+            n_modules=self.hspec.base.schema.modularity,
+            min_threshold=min_threshold)

@@ -97,6 +97,76 @@ def test_merge_keeps_heavy_from_both_shards():
         a.merge_from(SpaceSaving(capacity=3, n_cols=2))
 
 
+def test_multiway_fold_overestimates_and_admits_heavy():
+    """SpaceSaving.fold across shards (the sharded serving candidate-pool
+    sync): counts keep upper-bounding true weights and any value past the
+    W/m admission bound survives, however the stream was split."""
+    rng = np.random.default_rng(7)
+    n = 400
+    vals = rng.integers(0, 60, size=n).astype(np.uint32).reshape(-1, 1)
+    freqs = rng.integers(1, 6, size=n).astype(np.int64)
+    # one globally heavy value spread evenly across shards
+    vals[::8] = 99
+    freqs[::8] = 10
+    true = {}
+    for v, f in zip(vals[:, 0].tolist(), freqs.tolist()):
+        true[v] = true.get(v, 0) + int(f)
+    w_total = sum(true.values())
+    m = 16
+    assert true[99] > w_total / m  # past the admission bound
+
+    for n_shards in (2, 4):
+        bounds = np.linspace(0, n, n_shards + 1).astype(int)
+        shards = []
+        for s, e in zip(bounds[:-1], bounds[1:]):
+            p = SpaceSaving(capacity=m, n_cols=1)
+            p.offer(vals[s:e], freqs[s:e])
+            shards.append(p)
+        folded = SpaceSaving.fold(shards)
+        assert len(folded) <= m
+        assert (99,) in folded.counts()                # admitted
+        for row, c in folded.counts().items():
+            assert c >= true.get(row[0], 0)            # overestimate only
+        # fold == iterative merge_from (same cascade)
+        it = SpaceSaving(capacity=m, n_cols=1)
+        for p in shards:
+            it.merge_from(p)
+        assert folded.counts() == it.counts()
+
+
+def test_fold_min_count_floor_accumulates_across_shards():
+    """Rows absent from a full shard inherit that shard's min-count floor,
+    and the floors add up across a multi-way fold -- so a value evicted on
+    every shard still cannot out-rank the retained overestimates."""
+    shards = []
+    for base in (0, 10, 20):
+        p = SpaceSaving(capacity=2, n_cols=1)
+        p.offer(_rows(7), np.array([4]))               # evicted below
+        p.offer(_rows(base + 1, base + 2), np.array([6, 5]))
+        shards.append(p)
+    floors = [min(p.counts().values()) for p in shards]
+    folded = SpaceSaving.fold(shards)
+    # every retained count >= the sum of the other shards' floors + its own
+    # observed mass; in particular >= true(7) = 12 for any retained row
+    for row, c in folded.counts().items():
+        assert c >= sum(floors) - max(floors) + 5
+    # under-capacity folds are exact unions: no floors, no truncation
+    a = SpaceSaving(capacity=8, n_cols=1)
+    b = SpaceSaving(capacity=8, n_cols=1)
+    a.offer(_rows(1, 2), np.array([3, 4]))
+    b.offer(_rows(2, 3), np.array([5, 6]))
+    u = SpaceSaving.fold([a, b])
+    assert u.counts() == {(1,): 3, (2,): 9, (3,): 6}
+
+
+def test_fold_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        SpaceSaving.fold([])
+    with pytest.raises(ValueError, match="widths"):
+        SpaceSaving.fold([SpaceSaving(capacity=2, n_cols=1),
+                          SpaceSaving(capacity=2, n_cols=2)])
+
+
 def test_lazy_heap_stays_bounded():
     """Regression: repeated increments of resident rows pushed one stale
     heap entry each and nothing ever drained them under capacity."""
