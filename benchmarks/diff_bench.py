@@ -1,0 +1,71 @@
+"""Warn-only diff of two BENCH_*.json artifacts (perf-trajectory CI step).
+
+    python -m benchmarks.diff_bench OLD.json NEW.json [--threshold 1.30]
+
+Compares rows by name and prints a ``::warning::`` line (GitHub Actions
+annotation syntax; plain text elsewhere) for every benchmark whose
+``us_per_call`` regressed by more than ``--threshold`` (default 1.30x) and
+for rows that disappeared.  ALWAYS exits 0: CI timing boxes are noisy, so
+the trajectory is recorded and surfaced, never enforced -- a sustained
+regression shows up as the same warning on consecutive runs.
+
+Missing/unreadable OLD file is not an error either (first run of a new
+artifact has no baseline yet).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _rows(path: str) -> dict:
+    with open(path) as f:
+        artifact = json.load(f)
+    return {r["name"]: r for r in artifact.get("results", [])
+            if r.get("us_per_call", -1) > 0}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=1.30,
+                    help="warn when new/old wall time exceeds this ratio")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.old):
+        print(f"no baseline at {args.old}; skipping diff (first run)")
+        return
+    try:
+        old = _rows(args.old)
+        new = _rows(args.new)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"could not parse artifacts ({e}); skipping diff")
+        return
+
+    regressions = improvements = 0
+    for name, o in sorted(old.items()):
+        n = new.get(name)
+        if n is None:
+            print(f"::warning::bench row disappeared: {name}")
+            continue
+        ratio = n["us_per_call"] / max(o["us_per_call"], 1e-9)
+        if ratio > args.threshold:
+            regressions += 1
+            print(f"::warning::bench regression {name}: "
+                  f"{o['us_per_call']:.1f}us -> {n['us_per_call']:.1f}us "
+                  f"({ratio:.2f}x)")
+        elif ratio < 1.0 / args.threshold:
+            improvements += 1
+            print(f"bench improvement {name}: {o['us_per_call']:.1f}us -> "
+                  f"{n['us_per_call']:.1f}us ({ratio:.2f}x)")
+    print(f"diffed {len(old)} baseline rows vs {len(new)} new rows: "
+          f"{regressions} regression(s), {improvements} improvement(s)")
+    # warn-only by contract: never fail the build on timing noise
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

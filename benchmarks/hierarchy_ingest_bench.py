@@ -1,0 +1,176 @@
+"""Hierarchy ingest benchmark: fused single-launch cascade vs per-level
+launches (PR-5 acceptance surface; archived as BENCH_HIERARCHY.json).
+
+    PYTHONPATH=src python -m benchmarks.run --only hier_ingest \
+        --json-out BENCH_HIERARCHY.json
+
+Two comparisons, swept over hierarchy depth and stream block size:
+
+  * ``hier_ingest/fused_pallas_*`` vs ``hier_ingest/perlevel_pallas_*`` --
+    the ACCEPTANCE comparison: the fused single-launch kernel
+    (kernels/hier_update.py, one pallas_call over the concatenated level
+    tables, hash cached per row) against the per-level launch path (one
+    sketch_update_pallas launch per level, re-hashing its prefix at every
+    grid step).  The per-level row carries ``fused_speedup``; the
+    criterion is >= 2x at depth >= 3.  On this container both run
+    interpret=True, which prices each grid step's hash + one-hot work in
+    the same (Python) currency as TPU grid steps price VPU + MXU work;
+    re-run with interpret=False on TPU for hardware numbers.
+  * ``hier_ingest/cascade_jnp_*`` vs ``hier_ingest/perlevel_jnp_*`` -- the
+    compiled XLA ingest paths: the shared-family cascade (ONE hash pass +
+    integer divisions + L scatter-adds in one jit'd call, tables donated)
+    against the pre-PR-5 per-level path (L re-hash + scatter launches,
+    core.hierarchy.update_reference).  On CPU XLA the serial scatter-adds
+    dominate and both paths do L of them, so these rows sit near 1x --
+    they exist to track the TPU trend (where the one-hot matmul update
+    replaces the scatter and hashing/launches matter), not to carry the
+    acceptance number.
+
+Hash cost dominates the kernel rows by construction (2-chunk 32-bit
+modules, small level tables) -- the telemetry-key regime the serving
+endpoints ingest.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import hierarchy as hh
+from repro.core import sketch as sk
+from repro.core.hashing import KeySchema
+
+_RANGES = {2: (256, 256), 3: (64, 64, 32), 4: (32, 32, 16, 8)}
+_W = 4
+
+
+def _hier(depth: int) -> hh.HierarchySpec:
+    schema = KeySchema(domains=(1 << 32,) * depth)   # 2 chunks per module
+    base = sk.mod_sketch_spec(schema, [(i,) for i in range(depth)],
+                              _RANGES[depth], _W)
+    return hh.HierarchySpec.from_spec(base)
+
+
+def _stream(hspec: hh.HierarchySpec, b: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    items = np.stack(
+        [rng.integers(0, d, b, dtype=np.uint64).astype(np.uint32)
+         for d in hspec.base.schema.domains], axis=1)
+    freqs = rng.integers(1, 100, b).astype(np.int32)
+    return jnp.asarray(items), jnp.asarray(freqs)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _perlevel_jit(hspec, state, items, freqs):
+    # the pre-cascade ingest fold: every level re-hashes its prefix
+    return hh.update_reference(hspec, state, items, freqs)
+
+
+def _timed_median(fn, repeat: int = 7) -> float:
+    """Median wall time in us (one warmup call first) -- medians keep the
+    jnp rows stable against CPU scheduling noise."""
+    fn()
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def hier_ingest_fused_vs_perlevel() -> None:
+    key = jax.random.PRNGKey(0)
+    for depth in (2, 3, 4):
+        hspec = _hier(depth)
+        for b in (4096, 16384):
+            items, freqs = _stream(hspec, b, seed=depth)
+
+            ref_state = hh.init_hierarchy(hspec, key)
+            us_ref = _timed_median(lambda: jax.block_until_ready(
+                _perlevel_jit(hspec, ref_state, items, freqs)
+                .states[-1].table))
+            emit(f"hier_ingest/perlevel_jnp_L{depth}_B{b}", us_ref,
+                 f"items_per_s={b / (us_ref / 1e6):.3e};launches={depth}")
+
+            holder = {"state": hh.init_hierarchy(hspec, key)}
+
+            def cascade_step():
+                # update_jit donates the level tables: thread the state
+                holder["state"] = hh.update_jit(hspec, holder["state"],
+                                                items, freqs)
+                jax.block_until_ready(holder["state"].states[-1].table)
+
+            us_cas = _timed_median(cascade_step)
+            emit(f"hier_ingest/cascade_jnp_L{depth}_B{b}", us_cas,
+                 f"items_per_s={b / (us_cas / 1e6):.3e};launches=1;"
+                 f"speedup_vs_perlevel={us_ref / us_cas:.2f}x")
+
+
+def hier_ingest_pallas_launches() -> None:
+    """Interpret-mode Pallas rows: fused single launch vs one launch per
+    level, same block.  Tracks the TPU comparison; CPU wall time is the
+    Python interpreter, not the hardware."""
+    from repro.kernels import KernelHierarchy, make_plan
+    from repro.kernels.sketch_update import (
+        padded_table_size,
+        sketch_update_pallas,
+    )
+
+    depth, b, tile_h = 3, 512, 128
+    hspec = _hier(depth)
+    key = jax.random.PRNGKey(1)
+    items, freqs = _stream(hspec, b, seed=7)
+    np_items = np.asarray(items)
+
+    kh = KernelHierarchy(hspec, key, tile_h=tile_h, block_b=b,
+                         interpret=True)
+    kh.update(np_items, np.asarray(freqs))      # warmup: trace + compile
+    t0 = time.perf_counter()
+    kh.update(np_items, np.asarray(freqs))
+    us_fused = (time.perf_counter() - t0) * 1e6
+    emit(f"hier_ingest/fused_pallas_L{depth}_B{b}", us_fused,
+         f"items_per_s={b / (us_fused / 1e6):.3e};launches=1;"
+         f"tiles={kh.hplan.n_tiles};interpret=True")
+
+    # per-level: one sketch_update_pallas launch per level, same params
+    state = kh.state()
+    plans = [make_plan(s) for s in hspec.levels]
+
+    def per_level_pass(tables):
+        for lvl, (spec_l, plan_l) in enumerate(zip(hspec.levels, plans)):
+            chunks = spec_l.schema.module_chunks(
+                jnp.asarray(hspec.level_items(lvl, np_items)))
+            p = state.states[lvl].params
+            tables[lvl] = sketch_update_pallas(
+                plan_l, tables[lvl], chunks, freqs, p.q, p.r,
+                tile_h=tile_h, interpret=True)
+        jax.block_until_ready(tables[-1])
+        return tables
+
+    tables = [jnp.zeros((s.width, padded_table_size(s.table_size, tile_h)),
+                        jnp.int32) for s in hspec.levels]
+    tables = per_level_pass(tables)             # warmup: trace + compile
+    t0 = time.perf_counter()
+    tables = per_level_pass(tables)
+    us_per = (time.perf_counter() - t0) * 1e6
+    emit(f"hier_ingest/perlevel_pallas_L{depth}_B{b}", us_per,
+         f"items_per_s={b / (us_per / 1e6):.3e};launches={depth};"
+         f"fused_speedup={us_per / us_fused:.2f}x;interpret=True")
+    # parity while we are here: the per-level kernel tables must match the
+    # fused kernel's level slices bit for bit
+    for lvl, s in enumerate(hspec.levels):
+        a = np.asarray(tables[lvl])[:, : s.table_size]
+        b_ = np.asarray(state.states[lvl].table)
+        assert (a == b_).all(), f"fused/per-level kernel mismatch at {lvl}"
+
+
+ALL = [hier_ingest_fused_vs_perlevel, hier_ingest_pallas_launches]
+
+
+if __name__ == "__main__":
+    for fn in ALL:
+        fn()

@@ -78,12 +78,17 @@ def kernel_update_conservative() -> None:
     us_lin, _ = timed(lambda: jax.block_until_ready(
         ref.sketch_update_ref(plan, t0, chunks, jnp.asarray(freqs),
                               params.q, params.r)))
-    state0 = sk.SketchState(
-        params=params,
-        table=jnp.zeros((spec.width, spec.table_size), jnp.int32))
-    us_cons, want = timed(lambda: jax.block_until_ready(
-        sk.update_conservative_jit(spec, state0, jnp.asarray(items),
-                                   jnp.asarray(freqs)).table))
+    def cons_once():
+        # fresh zero table per call: update_conservative_jit donates its
+        # table arg, so a shared state0 would be consumed on the first call
+        state0 = sk.SketchState(
+            params=params,
+            table=jnp.zeros((spec.width, spec.table_size), jnp.int32))
+        return jax.block_until_ready(
+            sk.update_conservative_jit(spec, state0, jnp.asarray(items),
+                                       jnp.asarray(freqs)).table)
+
+    us_cons, want = timed(cons_once)
 
     t_int0 = time.perf_counter()
     got = sketch_update_conservative_pallas(

@@ -26,10 +26,11 @@ def main() -> None:
 
     import jax
 
-    from benchmarks import bounds_check, common, kernel_microbench, paper_figs, \
-        roofline_report, sharded_topk_bench
+    from benchmarks import bounds_check, common, hierarchy_ingest_bench, \
+        kernel_microbench, paper_figs, roofline_report, sharded_topk_bench
     benches = (paper_figs.ALL + bounds_check.ALL + kernel_microbench.ALL
-               + roofline_report.ALL + sharded_topk_bench.ALL)
+               + roofline_report.ALL + sharded_topk_bench.ALL
+               + hierarchy_ingest_bench.ALL)
     print("name,us_per_call,derived")
     t_start = time.time()
     failures = []

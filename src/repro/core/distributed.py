@@ -185,27 +185,90 @@ def lazy_hierarchy_update(
     *,
     mode: str = "linear",
 ) -> Tuple[jax.Array, ...]:
-    """Per-level lazy local fold of a hierarchy: no collective on ingest.
+    """Lazy local fold of ALL hierarchy levels in one shard_map: no
+    collective on ingest, no per-level re-hash, no per-level dispatch.
 
-    This is :func:`lazy_local_update` lifted to per-level
-    ``HierarchyState`` tables: every shard folds its slice of the stream
-    into its own copy of every level's table, and the psum merge is
-    deferred to the explicit sync point (:func:`merge_local_hierarchy`).
-    Level L sees the stream's columns re-cut to its group prefix
-    (``hspec.level_items``), exactly like the single-device update.
+    Every shard hashes its stream slice ONCE (the finest level's composite
+    index), derives each level's cell indices by the mixed-radix cascade
+    (core.hierarchy.hierarchy_indices -- exact under the shared per-group
+    params every ``init_hierarchy`` state carries), and scatter-adds into
+    its local copy of every level's table.  The psum merge is deferred to
+    the explicit sync point (:func:`merge_local_hierarchy`).  On TPU the
+    per-device fold body is a drop-in for the fused one-launch Pallas
+    kernel (kernels/hier_update.py); the jnp body is bit-identical to it
+    by the parity tests.
+
+    ``params`` keeps the one-entry-per-level shape of ``HierarchyState``
+    for compatibility; the cascade only reads the finest level's entry
+    (every other level's params are prefix slices of it).
 
     Only valid for linear tables; the conservative update is excluded from
     every psum path (see :func:`require_linear`).
     """
     require_linear(mode, "lazy_hierarchy_update")
+    from repro.core import hierarchy as hh
+
     items = jnp.asarray(items)
-    new = []
-    for lvl, (spec_l, p_l, tbl_l) in enumerate(
-            zip(hspec.levels, params, local_tables)):
-        new.append(lazy_local_update(
-            spec_l, mesh, data_axes, tbl_l, p_l,
-            hspec.level_items(lvl, items), freqs))
-    return tuple(new)
+    fine_params = params[-1]
+    n_levels = len(local_tables)
+
+    def fold(tbls, items_l, freqs_l):
+        idxs = hh.hierarchy_indices(hspec, fine_params, items_l)
+        return tuple(sk.add_at_indices(t[0], idx, freqs_l)[None]
+                     for t, idx in zip(tbls, idxs))
+
+    fn = shard_map(
+        fold,
+        mesh=mesh,
+        in_specs=(tuple(P(data_axes) for _ in range(n_levels)),
+                  P(data_axes), P(data_axes)),
+        out_specs=tuple(P(data_axes) for _ in range(n_levels)),
+        check_vma=False,
+    )
+    return fn(tuple(local_tables), items, freqs)
+
+
+def sharded_hierarchy_fold(
+    hspec,                      # core.hierarchy.HierarchySpec
+    fine_params: sk.SketchParams,
+    mesh: Mesh,
+    data_axes: Tuple[str, ...],
+    items: jax.Array,           # uint32[B, n_modules], B % n_shards == 0
+    freqs: jax.Array,
+    *,
+    table_dtypes: Sequence = (),
+) -> Tuple[jax.Array, ...]:
+    """Synchronous sharded build of every level's MERGED delta in one
+    shard_map: hash each stream slice once, cascade to all level indices,
+    scatter-add per level, psum per level (exact by linearity).
+
+    The hierarchy counterpart of :func:`sharded_build`; used by
+    core.hierarchy.sharded_hierarchy_build.  ``fine_params`` is the finest
+    level's (shared-family) params; ``table_dtypes`` gives one dtype per
+    level (defaults to int32).
+    """
+    from repro.core import hierarchy as hh
+
+    dtypes = (tuple(table_dtypes)
+              or (jnp.int32,) * hspec.n_levels)
+
+    def fold(items_l, freqs_l):
+        idxs = hh.hierarchy_indices(hspec, fine_params, items_l)
+        out = []
+        for spec_l, idx, dt in zip(hspec.levels, idxs, dtypes):
+            tbl = jnp.zeros((spec_l.width, spec_l.table_size), dtype=dt)
+            out.append(jax.lax.psum(sk.add_at_indices(tbl, idx, freqs_l),
+                                    data_axes))
+        return tuple(out)
+
+    fn = shard_map(
+        fold,
+        mesh=mesh,
+        in_specs=(P(data_axes), P(data_axes)),
+        out_specs=tuple(P() for _ in range(hspec.n_levels)),
+        check_vma=False,
+    )
+    return fn(items, freqs)
 
 
 def merge_local_hierarchy(

@@ -21,6 +21,37 @@ Overestimation (CM) + prefix monotonicity give *no false negatives* for any
 key whose group values appear in the candidate sets; false positives are
 bounded by the per-level CM overestimate.
 
+Shared per-group hash family (ingest cascade)
+---------------------------------------------
+All levels share ONE per-group hash family: :func:`init_hierarchy` draws the
+finest level's params once and every level L uses the prefix slices
+``q[:, :chunks(g_1..g_{L+1})]`` and ``r[:, :L+1]``.  Independence argument:
+each level's row index is the mixed-radix combination of *independent*
+per-group CW hashes, which is exactly the composite hash of the base family
+restricted to groups 0..L -- two distinct level-L prefixes differ in some
+group j <= L, and conditioning on the other groups' hashes leaves H_j
+pairwise independent, so every level's row hash remains pairwise independent
+over its own key domain and the per-level CM bounds (Thms 1-3) are
+unchanged.  What IS given up is independence *between* levels, which no
+per-level guarantee uses (the descent's union bound over levels never
+needed cross-level independence).
+
+What sharing buys is the ingest cascade: with shared per-group hashes the
+level indices nest exactly,
+
+    idx_L(prefix, v) = idx_{L-1}(prefix) * r_L + H_L(v)
+    idx_L            = idx_{m-1} // (r_{L+1} * ... * r_{m-1})
+
+so one hash pass over the full key yields every level's cell index by an
+integer division (:func:`hierarchy_indices`).  Ingest cost per item drops
+from ~L hash passes + L kernel launches (the old per-level path, kept as
+:func:`update_reference`) to ONE hash pass + L fused table adds; the Pallas
+path (kernels/hier_update.py) folds a stream block into all level tables in
+a single launch against the level-concatenated padded table.  The
+conservative update gets the same cascade for its index computation and then
+runs the per-level sequential folds (the min couples rows, so the folds
+themselves stay per level).
+
 Every level's table is linear in the stream, so a hierarchy merges cell-wise
 per level and composes with the distributed runtime (core/distributed.py)
 exactly like a single sketch: see :func:`merge` and
@@ -39,6 +70,7 @@ indices per row, combined on the fly.  The Pallas path
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -96,14 +128,32 @@ class HierarchySpec:
         sum_L prod(r_1..r_L) <= h * r/(r-1) for geometric ranges)."""
         return sum(s.width * s.table_size for s in self.levels)
 
+    @functools.cached_property
+    def _level_cols(self) -> Tuple[Tuple[int, ...], ...]:
+        """Per-level column tuples for :meth:`level_items`, computed once at
+        first use and cached on the (frozen) spec -- the old per-call list
+        rebuild sat on the ingest hot path."""
+        return tuple(tuple(level_modules(self.base, l))
+                     for l in range(self.n_levels))
+
+    @functools.cached_property
+    def level_divisors(self) -> Tuple[int, ...]:
+        """``idx_L = idx_finest // level_divisors[L]`` -- the suffix range
+        products of the mixed radix (cascade identity; divisor of the finest
+        level is 1)."""
+        divs, d = [], 1
+        for r in reversed(self.base.ranges):
+            divs.append(d)
+            d *= int(r)
+        return tuple(reversed(divs))
+
     def level_items(self, level: int, items: np.ndarray | jax.Array):
         """Select/reorder full-key columns into level ``level``'s layout."""
-        cols = list(level_modules(self.base, level))
-        return items[:, cols]
+        return items[:, list(self._level_cols[level])]
 
     def to_schema_order(self, items: np.ndarray) -> np.ndarray:
         """Group-major full-key columns -> original schema module order."""
-        mods = level_modules(self.base, self.n_levels - 1)
+        mods = self._level_cols[self.n_levels - 1]
         out = np.empty_like(items)
         for pos, m in enumerate(mods):
             out[:, m] = items[:, pos]
@@ -114,21 +164,140 @@ class HierarchyState(NamedTuple):
     states: Tuple[sk.SketchState, ...]   # one per level, coarse -> fine
 
 
+def level_params(hspec: HierarchySpec, base_params: sk.SketchParams,
+                 level: int) -> sk.SketchParams:
+    """Level ``level``'s hash params as prefix slices of the finest level's.
+
+    Group-major layout makes groups 0..level's chunk columns the FIRST
+    ``total_chunks`` columns of the finest chunk matrix, so slicing q/r gives
+    exactly the same per-group hash functions at every level -- the shared
+    family underlying the ingest cascade."""
+    nc = hspec.levels[level].schema.total_chunks
+    return sk.SketchParams(q=base_params.q[:, :nc],
+                           r=base_params.r[:, : level + 1])
+
+
 def init_hierarchy(hspec: HierarchySpec, key: jax.Array,
                    dtype=jnp.int32) -> HierarchyState:
-    keys = jax.random.split(key, hspec.n_levels)
-    return HierarchyState(states=tuple(
-        sk.init_state(s, k, dtype=dtype) for s, k in zip(hspec.levels, keys)
-    ))
+    """Draw ONE shared per-group hash family and zero tables for all levels.
+
+    Every level's params are prefix slices of the finest level's draw (see
+    :func:`level_params` and the module header for the independence
+    argument).  All cascade entry points (:func:`update`,
+    :func:`hierarchy_indices`, the fused Pallas kernel, the distributed
+    folds) rely on this shared-prefix invariant; states built here always
+    satisfy it."""
+    base_params = sk.init_params(hspec.levels[-1], key)
+    states = []
+    for l, spec_l in enumerate(hspec.levels):
+        states.append(sk.SketchState(
+            params=level_params(hspec, base_params, l),
+            table=jnp.zeros((spec_l.width, spec_l.table_size), dtype=dtype)))
+    return HierarchyState(states=tuple(states))
+
+
+def params_share_prefix(state: HierarchyState) -> bool:
+    """Host-side check of the shared-params invariant (concrete arrays only).
+
+    True iff every level's params are the prefix slices of the finest
+    level's -- the precondition of every cascade path.  Used by the kernel
+    wrappers when importing externally supplied states; the jit'd hot paths
+    assume the invariant (init_hierarchy always establishes it)."""
+    fine = state.states[-1].params
+    fq, fr = np.asarray(fine.q), np.asarray(fine.r)
+    for l, st in enumerate(state.states):
+        q, r = np.asarray(st.params.q), np.asarray(st.params.r)
+        if q.shape[1] > fq.shape[1] or r.shape[1] != l + 1:
+            return False
+        if not (np.array_equal(q, fq[:, : q.shape[1]])
+                and np.array_equal(r, fr[:, : l + 1])):
+            return False
+    return True
+
+
+import weakref
+
+_validated_params = weakref.WeakValueDictionary()  # id(q_fine) -> q_fine
+
+
+def _require_shared_params(state: HierarchyState, entry: str) -> None:
+    """Refuse non-shared-params states on the cascade entry points.
+
+    The cascade derives coarse-level cells from the finest index by
+    division, which is garbage for states whose levels were drawn
+    independently (the pre-cascade layout) -- silently wrong tables, lost
+    no-false-negative guarantee.  Concrete states are validated host-side
+    once per distinct finest-params array (params persist across blocks,
+    so streaming ingest pays the tiny device read a single time and stays
+    async afterwards); traced values cannot be inspected, so jit-embedded
+    callers rely on the init_hierarchy invariant, same as the distributed
+    folds."""
+    q = state.states[-1].params.q
+    if isinstance(q, jax.core.Tracer):
+        return
+    if _validated_params.get(id(q)) is q:
+        return
+    if not params_share_prefix(state):
+        raise ValueError(
+            f"{entry} requires the shared per-group hash family (level "
+            "params must be prefix slices of the finest level's, as drawn "
+            "by init_hierarchy); for independently drawn per-level params "
+            "use update_reference")
+    try:
+        _validated_params[id(q)] = q
+    except TypeError:
+        pass  # non-weakrefable array type: validate again next call
 
 
 # --------------------------------------------------------------------------
 # Stream ops (linear => mergeable)
 # --------------------------------------------------------------------------
 
+def hierarchy_indices(hspec: HierarchySpec, fine_params: sk.SketchParams,
+                      items: jax.Array) -> Tuple[jax.Array, ...]:
+    """Every level's cell indices from ONE hash pass: tuple of uint32[w, B].
+
+    Computes the finest level's composite index (one CW hash per group,
+    exactly ``compute_indices`` of ``hspec.levels[-1]`` on the group-major
+    columns) and derives each coarser level by the cascade identity
+    ``idx_L = idx_finest // prod(r_{L+1}..r_{m-1})`` -- exact, because the
+    dropped remainder is precisely the mixed-radix value of the finer
+    groups' sub-indices.  Requires the shared-prefix params invariant
+    (:func:`init_hierarchy`)."""
+    fine = hspec.levels[-1]
+    idx_fine = sk.compute_indices(
+        fine, fine_params, hspec.level_items(hspec.n_levels - 1, items))
+    out = []
+    for div in hspec.level_divisors:
+        out.append(idx_fine // jnp.uint32(div) if div > 1 else idx_fine)
+    return tuple(out)
+
+
 def update(hspec: HierarchySpec, state: HierarchyState,
            items: jax.Array, freqs: jax.Array) -> HierarchyState:
-    """Fold a block of full keys into every level (items: uint32[B, n])."""
+    """Fold a block of full keys into every level (items: uint32[B, n]).
+
+    Cascade path: hash once per (row, item), derive all L level indices by
+    integer division, then L scatter-adds -- bit-identical to
+    :func:`update_reference` under the shared params drawn by
+    :func:`init_hierarchy` (enforced by tests/test_hier_update_kernel.py)."""
+    _require_shared_params(state, "hierarchy.update")
+    items = jnp.asarray(items)
+    idxs = hierarchy_indices(hspec, state.states[-1].params, items)
+    new = []
+    for st_l, idx in zip(state.states, idxs):
+        new.append(sk.SketchState(
+            params=st_l.params,
+            table=sk.add_at_indices(st_l.table, idx, freqs)))
+    return HierarchyState(states=tuple(new))
+
+
+def update_reference(hspec: HierarchySpec, state: HierarchyState,
+                     items: jax.Array, freqs: jax.Array) -> HierarchyState:
+    """Per-level reference fold: L independent ``sk.update`` calls, each
+    re-hashing its prefix from scratch.  The pre-cascade ingest path, kept
+    as the parity oracle for :func:`update` and the fused Pallas kernel
+    (and as the per-level-launch baseline in the ingest benchmark)."""
     items = jnp.asarray(items)
     new = []
     for lvl, (spec_l, st_l) in enumerate(zip(hspec.levels, state.states)):
@@ -141,18 +310,23 @@ def update_conservative(hspec: HierarchySpec, state: HierarchyState,
                         items: jax.Array, freqs: jax.Array) -> HierarchyState:
     """Conservative fold into every level (freqs must be non-negative).
 
-    Each level applies core.sketch.update_conservative independently, so
+    The index computation shares the one-hash-pass cascade with
+    :func:`update`; each level then applies the sequential Estan-Varghese
+    fold independently (the row-coupling min keeps the folds per level), so
     every level still never underestimates and the heavy-hitter descent's
     no-false-negative argument is unchanged (est(prefix) >= true(prefix) >=
     true(key)).  The resulting tables are NOT linear in the stream: a
     conservatively built hierarchy must not be merged cell-wise (see
     :func:`merge`) or fed through the psum paths of core/distributed.py.
     """
+    _require_shared_params(state, "hierarchy.update_conservative")
     items = jnp.asarray(items)
+    idxs = hierarchy_indices(hspec, state.states[-1].params, items)
     new = []
-    for lvl, (spec_l, st_l) in enumerate(zip(hspec.levels, state.states)):
-        new.append(sk.update_conservative(
-            spec_l, st_l, hspec.level_items(lvl, items), freqs))
+    for st_l, idx in zip(state.states, idxs):
+        new.append(sk.SketchState(
+            params=st_l.params,
+            table=sk.conservative_fold(st_l.table, idx, freqs)))
     return HierarchyState(states=tuple(new))
 
 
@@ -176,19 +350,47 @@ def build_hierarchy(hspec: HierarchySpec, key: jax.Array,
     return state
 
 
-import functools
+# The jit'd hierarchy folds donate every level TABLE (ingest folds in place
+# instead of copying sum_L w*h_L cells per block) but not the params: the
+# shared family is referenced by all levels and the query paths, and
+# donation is effective on CPU as well as TPU.  Callers rebind the state to
+# the returned value (build_hierarchy, the serving endpoints all do).
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=(1,))
+def _update_tables_jit(hspec: HierarchySpec, tables, fine_params,
+                       items, freqs):
+    idxs = hierarchy_indices(hspec, fine_params, items)
+    return tuple(sk.add_at_indices(t, idx, freqs)
+                 for t, idx in zip(tables, idxs))
 
 
-@functools.partial(jax.jit, static_argnums=0)
 def update_jit(hspec: HierarchySpec, state: HierarchyState,
                items, freqs) -> HierarchyState:
-    return update(hspec, state, items, freqs)
+    _require_shared_params(state, "hierarchy.update_jit")
+    tables = _update_tables_jit(hspec, tuple(st.table for st in state.states),
+                                state.states[-1].params, items, freqs)
+    return HierarchyState(states=tuple(
+        sk.SketchState(params=st.params, table=t)
+        for st, t in zip(state.states, tables)))
 
 
-@functools.partial(jax.jit, static_argnums=0)
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=(1,))
+def _update_conservative_tables_jit(hspec: HierarchySpec, tables,
+                                    fine_params, items, freqs):
+    idxs = hierarchy_indices(hspec, fine_params, items)
+    return tuple(sk.conservative_fold(t, idx, freqs)
+                 for t, idx in zip(tables, idxs))
+
+
 def update_conservative_jit(hspec: HierarchySpec, state: HierarchyState,
                             items, freqs) -> HierarchyState:
-    return update_conservative(hspec, state, items, freqs)
+    _require_shared_params(state, "hierarchy.update_conservative_jit")
+    tables = _update_conservative_tables_jit(
+        hspec, tuple(st.table for st in state.states),
+        state.states[-1].params, items, freqs)
+    return HierarchyState(states=tuple(
+        sk.SketchState(params=st.params, table=t)
+        for st, t in zip(state.states, tables)))
 
 
 def sharded_hierarchy_build(
@@ -201,10 +403,12 @@ def sharded_hierarchy_build(
     *,
     mode: str = "linear",
 ) -> HierarchyState:
-    """Distributed build: per-level sharded fold + psum merge (exact).
+    """Distributed build: sharded cascade fold + per-level psum (exact).
 
-    Reuses core.distributed.sharded_build level by level; every level's
-    table is linear, so the psum merge is exact just like the flat case.
+    One shard_map over ALL levels (core.distributed.sharded_hierarchy_fold):
+    each device hashes its stream slice once, derives every level's indices
+    by the cascade, scatter-adds into per-level local deltas, and the psum
+    merge per level is exact by linearity, just like the flat case.
     ``mode`` exists only to be refused: a conservatively built hierarchy
     (:func:`update_conservative`) has non-linear tables and must never
     enter a psum, so passing mode="conservative" raises instead of
@@ -214,15 +418,12 @@ def sharded_hierarchy_build(
 
     dist.require_linear(mode, "sharded_hierarchy_build")
     items = jnp.asarray(items)
-    new = []
-    for lvl, (spec_l, st_l) in enumerate(zip(hspec.levels, state.states)):
-        delta = dist.sharded_build(
-            spec_l, st_l.params, mesh, data_axes,
-            hspec.level_items(lvl, items),
-            freqs, table_dtype=st_l.table.dtype)
-        new.append(sk.SketchState(params=st_l.params,
-                                  table=st_l.table + delta))
-    return HierarchyState(states=tuple(new))
+    deltas = dist.sharded_hierarchy_fold(
+        hspec, state.states[-1].params, mesh, data_axes, items, freqs,
+        table_dtypes=tuple(st.table.dtype for st in state.states))
+    return HierarchyState(states=tuple(
+        sk.SketchState(params=st.params, table=st.table + d)
+        for st, d in zip(state.states, deltas)))
 
 
 # --------------------------------------------------------------------------
@@ -243,6 +444,9 @@ def candidate_partials(
     index of child (p, c) at row k is ``pp[k, p] + cp[k, c]`` -- exactly
     ``compute_indices`` of the level spec on the concatenated key, by the
     mixed-radix stride identity stride_j(level) = stride_j(level-1) * r_L.
+    Under the shared per-group family the sliced prefix params ARE level
+    ``level - 1``'s params, so the prefix partials equal that level's own
+    cell indices (the same nesting the ingest cascade exploits).
     """
     spec_l = hspec.levels[level]
     params = state.states[level].params

@@ -218,6 +218,19 @@ def compute_indices_np(spec: SketchSpec, params: SketchParams, items: np.ndarray
     return idx.astype(np.uint32)
 
 
+def add_at_indices(table: jax.Array, idx: jax.Array,
+                   freqs: jax.Array) -> jax.Array:
+    """Scatter-add ``freqs`` into ``table`` at per-row cell indices.
+
+    idx: uint32[w, B] (one cell per row per item).  This is the linear-update
+    primitive shared by :func:`update` and the hierarchy's cascade path
+    (core/hierarchy.py), where the indices are derived once for all levels."""
+    w, h = table.shape
+    flat = (jnp.arange(w, dtype=jnp.uint32)[:, None] * jnp.uint32(h) + idx).reshape(-1)
+    f = jnp.broadcast_to(freqs.astype(table.dtype), (w, freqs.shape[0])).reshape(-1)
+    return table.reshape(-1).at[flat].add(f).reshape(w, h)
+
+
 def update(
     spec: SketchSpec,
     state: SketchState,
@@ -226,11 +239,8 @@ def update(
 ) -> SketchState:
     """Fold a block of (item, freq) pairs into the sketch (order-free)."""
     idx = compute_indices(spec, state.params, items)          # [w, B]
-    w, h = state.table.shape
-    flat = (jnp.arange(w, dtype=jnp.uint32)[:, None] * jnp.uint32(h) + idx).reshape(-1)
-    f = jnp.broadcast_to(freqs.astype(state.table.dtype), (w, freqs.shape[0])).reshape(-1)
-    table = state.table.reshape(-1).at[flat].add(f).reshape(w, h)
-    return SketchState(params=state.params, table=table)
+    return SketchState(params=state.params,
+                       table=add_at_indices(state.table, idx, freqs))
 
 
 def query(spec: SketchSpec, state: SketchState, items: jax.Array) -> jax.Array:
@@ -238,6 +248,26 @@ def query(spec: SketchSpec, state: SketchState, items: jax.Array) -> jax.Array:
     idx = compute_indices(spec, state.params, items)          # [w, B]
     vals = jnp.take_along_axis(state.table, idx.astype(jnp.int32), axis=1)
     return jnp.min(vals, axis=0)
+
+
+def conservative_fold(table: jax.Array, idx: jax.Array,
+                      freqs: jax.Array) -> jax.Array:
+    """Estan-Varghese fold with precomputed indices (sequential in B).
+
+    cell_k <- max(cell_k, min_k(cell_k) + f), one item at a time; the min
+    couples all w rows so the loop cannot be batched.  Shared by
+    :func:`update_conservative` and the hierarchy's cascade path, which
+    hashes once and feeds every level's derived indices through this fold."""
+    w = table.shape[0]
+
+    def body(b, tbl):
+        cells = idx[:, b].astype(jnp.int32)
+        cur = tbl[jnp.arange(w), cells]
+        est = jnp.min(cur) + freqs[b].astype(tbl.dtype)
+        new = jnp.maximum(cur, est)
+        return tbl.at[jnp.arange(w), cells].set(new)
+
+    return jax.lax.fori_loop(0, idx.shape[1], body, table)
 
 
 def update_conservative(
@@ -252,17 +282,8 @@ def update_conservative(
     Not mergeable across shards -- excluded from the distributed runtime.
     """
     idx = compute_indices(spec, state.params, items)          # [w, B]
-    w, h = state.table.shape
-
-    def body(b, table):
-        cells = idx[:, b].astype(jnp.int32)
-        cur = table[jnp.arange(w), cells]
-        est = jnp.min(cur) + freqs[b].astype(table.dtype)
-        new = jnp.maximum(cur, est)
-        return table.at[jnp.arange(w), cells].set(new)
-
-    table = jax.lax.fori_loop(0, items.shape[0], body, state.table)
-    return SketchState(params=state.params, table=table)
+    return SketchState(params=state.params,
+                       table=conservative_fold(state.table, idx, freqs))
 
 
 def check_conservative_freqs(freqs, table_dtype) -> None:
@@ -358,9 +379,22 @@ def cell_std(table: jax.Array) -> jax.Array:
 import functools
 
 
-@functools.partial(jax.jit, static_argnums=0)
+# The jit'd update wrappers donate the TABLE buffer (ingest folds the block
+# in place instead of copying the table every call) but deliberately not the
+# hash params: params are shared across states, query paths, and merge
+# checks, so donating them would invalidate live references (donation is
+# effective on CPU too, not just TPU).  Callers must rebind the state to the
+# returned value -- every streaming build here does (state = update_jit(...)).
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=(1,))
+def _update_table_jit(spec: SketchSpec, table, params, items, freqs):
+    idx = compute_indices(spec, params, items)
+    return add_at_indices(table, idx, freqs)
+
+
 def update_jit(spec: SketchSpec, state: SketchState, items, freqs) -> SketchState:
-    return update(spec, state, items, freqs)
+    table = _update_table_jit(spec, state.table, state.params, items, freqs)
+    return SketchState(params=state.params, table=table)
 
 
 @functools.partial(jax.jit, static_argnums=0)
@@ -368,10 +402,18 @@ def query_jit(spec: SketchSpec, state: SketchState, items) -> jax.Array:
     return query(spec, state, items)
 
 
-@functools.partial(jax.jit, static_argnums=0)
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=(1,))
+def _update_conservative_table_jit(spec: SketchSpec, table, params,
+                                   items, freqs):
+    idx = compute_indices(spec, params, items)
+    return conservative_fold(table, idx, freqs)
+
+
 def update_conservative_jit(spec: SketchSpec, state: SketchState,
                             items, freqs) -> SketchState:
-    return update_conservative(spec, state, items, freqs)
+    table = _update_conservative_table_jit(spec, state.table, state.params,
+                                           items, freqs)
+    return SketchState(params=state.params, table=table)
 
 
 def stream_blocks(items, freqs, block: int):

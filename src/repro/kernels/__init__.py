@@ -7,7 +7,17 @@ from repro.kernels.hier_query import (  # noqa: F401
     hier_candidate_query,
     hier_candidate_query_ref,
 )
-from repro.kernels.ops import KernelSketch, default_interpret  # noqa: F401
+from repro.kernels.hier_update import (  # noqa: F401
+    HierPlan,
+    hier_update_pallas,
+    hier_update_ref,
+    make_hier_plan,
+)
+from repro.kernels.ops import (  # noqa: F401
+    KernelHierarchy,
+    KernelSketch,
+    default_interpret,
+)
 from repro.kernels.sketch_update_conservative import (  # noqa: F401
     sketch_update_conservative_pallas,
 )

@@ -1,0 +1,261 @@
+"""Pallas TPU kernel: fold one stream block into ALL hierarchy levels in a
+single launch.
+
+The per-level ingest path pays L hash passes and L kernel launches per
+stream block.  Under the shared per-group hash family (core/hierarchy.py)
+the level indices nest in the mixed radix,
+
+    idx_L = idx_finest // (r_{L+1} * ... * r_{m-1}),
+
+so one composite hash per (row, item) determines every level's cell.  This
+kernel concatenates the levels into one padded table ``[w, sum_L h_L_pad]``
+(each level padded to a tile multiple) and runs ONE pallas_call with grid
+(w, total_tiles):
+
+  * at each row's first tile the full composite index is hashed once into a
+    VMEM scratch (uint32 limb CW arithmetic on the VPU, exactly
+    kernels/hashes.row_indices);
+  * every tile then derives ITS level's local index with one integer
+    division by the tile's static level divisor and a subtraction of the
+    tile's base column -- the per-tile metadata rides in a tiny
+    ``[n_tiles, 2]`` int32 input indexed by the grid;
+  * the scatter-add reuses the one-hot MXU limb-matmul machinery of
+    kernels/sketch_update.py verbatim: frequencies split into two 12-bit
+    limbs so integer tables accumulate exactly (per-arrival |f| < 2^24,
+    wrapper-checked upstream), f32 tables use a single contraction.
+
+Versus L per-level launches this amortizes the chunk/frequency loads and
+the B x tile one-hot materialization across levels, hashes each item once
+per row instead of once per (row, level), and dispatches once.  The
+conservative update is excluded (its row-coupling min forces a sequential
+B-loop; it gets the shared cascade at the index level via
+core.hierarchy.update_conservative instead).
+
+Bit-exactness: identical to per-level core.sketch.update on integer tables;
+for f32 tables exact whenever every per-cell partial sum is exactly
+representable (e.g. integer-valued weights < 2^24), tolerance-level
+otherwise (MXU accumulation order differs from scatter order).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.hashes import IndexPlan, make_plan, row_indices
+
+_LIMB_BITS = 12
+_LIMB_MASK = (1 << _LIMB_BITS) - 1
+
+
+class HierPlan(NamedTuple):
+    """Static layout of the fused multi-level update (hashable, jit-static).
+
+    ``plan`` is the FINEST level's IndexPlan (group-major chunk layout);
+    every coarser level's index is plan's composite index divided by its
+    ``level_divs`` entry.  Level l's table occupies columns
+    ``[level_offsets[l], level_offsets[l] + level_sizes[l])`` of the
+    concatenated table, zero-padded up to ``level_pads[l]`` (a tile_h
+    multiple)."""
+    plan: IndexPlan
+    level_sizes: Tuple[int, ...]    # h_l (unpadded cells per row)
+    level_pads: Tuple[int, ...]     # h_l padded to a tile_h multiple
+    level_divs: Tuple[int, ...]     # idx_l = idx_finest // div_l
+    tile_h: int
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.level_sizes)
+
+    @property
+    def padded_cols(self) -> int:
+        return sum(self.level_pads)
+
+    @property
+    def level_offsets(self) -> Tuple[int, ...]:
+        out, off = [], 0
+        for p in self.level_pads:
+            out.append(off)
+            off += p
+        return tuple(out)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.padded_cols // self.tile_h
+
+
+def make_hier_plan(hspec, tile_h: int = 512) -> HierPlan:
+    """Build the fused-update plan from a core.hierarchy.HierarchySpec."""
+    fine = hspec.levels[-1]
+    if fine.table_size >= 1 << 31:
+        raise ValueError("finest table size must fit int32 cell indices")
+    pads = tuple(-(-s.table_size // tile_h) * tile_h for s in hspec.levels)
+    return HierPlan(
+        plan=make_plan(fine),
+        level_sizes=tuple(s.table_size for s in hspec.levels),
+        level_pads=pads,
+        level_divs=tuple(int(d) for d in hspec.level_divisors),
+        tile_h=int(tile_h),
+    )
+
+
+def _tile_meta(hplan: HierPlan) -> np.ndarray:
+    """int32[n_tiles, 2]: (level divisor, tile's base column within its
+    level) per global tile -- the only per-tile state the kernel needs."""
+    rows = []
+    for l, pad in enumerate(hplan.level_pads):
+        for t in range(pad // hplan.tile_h):
+            rows.append((hplan.level_divs[l], t * hplan.tile_h))
+    return np.asarray(rows, dtype=np.int32)
+
+
+def _local_lanes(idx_scratch_ref, meta_ref):
+    """Derive this tile's local one-hot targets from the cached finest
+    index: cascade division by the tile's level divisor, then shift by the
+    tile's base column.  Out-of-tile items (and zero-pad rows of the block)
+    simply match no lane."""
+    idx_fine = idx_scratch_ref[...]                          # int32[B]
+    div = meta_ref[0, 0]
+    base = meta_ref[0, 1]
+    return jax.lax.div(idx_fine, div) - base
+
+
+def _hier_kernel_int(hplan: HierPlan, tile_h: int,
+                     chunks_ref, flo_ref, fhi_ref, q_ref, r_ref, meta_ref,
+                     table_in_ref, table_out_ref, idx_scratch_ref):
+    """One (row, global tile) step: int table, two 12-bit frequency limbs."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _hash_once():
+        # ONE composite hash per (row, item), cached for all tiles/levels
+        idx_scratch_ref[...] = row_indices(
+            hplan.plan, chunks_ref[...], q_ref[0], r_ref[0])
+
+    local = _local_lanes(idx_scratch_ref, meta_ref)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)    # [B, TH]
+    dot_lo = jnp.dot(flo_ref[...][None, :], onehot,
+                     preferred_element_type=jnp.float32)      # [1, TH]
+    dot_hi = jnp.dot(fhi_ref[...][None, :], onehot,
+                     preferred_element_type=jnp.float32)
+    delta = dot_lo.astype(jnp.int32) + (dot_hi.astype(jnp.int32) << _LIMB_BITS)
+    table_out_ref[...] = table_in_ref[...] + delta
+
+
+def _hier_kernel_f32(hplan: HierPlan, tile_h: int,
+                     chunks_ref, f_ref, q_ref, r_ref, meta_ref,
+                     table_in_ref, table_out_ref, idx_scratch_ref):
+    """float32-table variant (gradient sketches): single MXU contraction."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _hash_once():
+        idx_scratch_ref[...] = row_indices(
+            hplan.plan, chunks_ref[...], q_ref[0], r_ref[0])
+
+    local = _local_lanes(idx_scratch_ref, meta_ref)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)
+    delta = jnp.dot(f_ref[...][None, :], onehot,
+                    preferred_element_type=jnp.float32)
+    table_out_ref[...] = table_in_ref[...] + delta[0][None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("hplan", "interpret"), donate_argnums=(1,)
+)
+def hier_update_pallas(
+    hplan: HierPlan,
+    table: jax.Array,    # [w, hplan.padded_cols] int or float32 concat table
+    chunks: jax.Array,   # uint32[B, C] finest-layout 16-bit key digits
+    freqs: jax.Array,    # int32[B] or float32[B]
+    q: jax.Array,        # uint32[w, C] shared-family multipliers
+    r: jax.Array,        # uint32[w, m] shared-family offsets
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fold one stream block into every level's table in ONE pallas_call.
+
+    Returns the new concatenated table (input buffer donated).  Zero-pad
+    rows of the block are no-ops (freq 0); level pad columns are never hit
+    (indices < h_l).
+    """
+    w, cols = table.shape
+    if cols != hplan.padded_cols:
+        raise ValueError(
+            f"concatenated table has {cols} columns, plan expects "
+            f"{hplan.padded_cols}")
+    tile_h = hplan.tile_h
+    b, c = chunks.shape
+    grid = (w, hplan.n_tiles)
+    meta = jnp.asarray(_tile_meta(hplan))
+
+    chunk_spec = pl.BlockSpec((b, c), lambda k, t: (0, 0))
+    f_spec = pl.BlockSpec((b,), lambda k, t: (0,))
+    q_spec = pl.BlockSpec((1, c), lambda k, t: (k, 0))
+    r_spec = pl.BlockSpec((1, r.shape[1]), lambda k, t: (k, 0))
+    meta_spec = pl.BlockSpec((1, 2), lambda k, t: (t, 0))
+    tbl_spec = pl.BlockSpec((1, tile_h), lambda k, t: (k, t))
+    scratch = [pltpu.VMEM((b,), jnp.int32)]
+
+    if jnp.issubdtype(table.dtype, jnp.integer):
+        flo = (freqs.astype(jnp.int32) & _LIMB_MASK).astype(jnp.float32)
+        fhi = (freqs.astype(jnp.int32) >> _LIMB_BITS).astype(jnp.float32)
+        kernel = functools.partial(_hier_kernel_int, hplan, tile_h)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[chunk_spec, f_spec, f_spec, q_spec, r_spec, meta_spec,
+                      tbl_spec],
+            out_specs=tbl_spec,
+            out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+            scratch_shapes=scratch,
+            input_output_aliases={6: 0},
+            interpret=interpret,
+        )(chunks, flo, fhi, q, r, meta, table)
+    else:
+        kernel = functools.partial(_hier_kernel_f32, hplan, tile_h)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[chunk_spec, f_spec, q_spec, r_spec, meta_spec,
+                      tbl_spec],
+            out_specs=tbl_spec,
+            out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+            scratch_shapes=scratch,
+            input_output_aliases={5: 0},
+            interpret=interpret,
+        )(chunks, freqs.astype(table.dtype), q, r, meta, table)
+
+
+@functools.partial(jax.jit, static_argnames=("hplan",))
+def hier_update_ref(
+    hplan: HierPlan,
+    table: jax.Array,
+    chunks: jax.Array,
+    freqs: jax.Array,
+    q: jax.Array,
+    r: jax.Array,
+) -> jax.Array:
+    """jnp oracle over the SAME concatenated padded table: per-row composite
+    hash once, cascade divisions, per-level scatter-adds (bit-identical to
+    per-level core.sketch.update under the shared params)."""
+    rows = [row_indices(hplan.plan, chunks, q[k], r[k])
+            for k in range(hplan.plan.width)]
+    idx_fine = jnp.stack(rows, axis=0)                        # int32[w, B]
+    w = idx_fine.shape[0]
+    out = table
+    for off, div in zip(hplan.level_offsets, hplan.level_divs):
+        idx = jax.lax.div(idx_fine, jnp.int32(div)) + off
+        flat = (jnp.arange(w, dtype=jnp.int32)[:, None] * table.shape[1]
+                + idx).reshape(-1)
+        f = jnp.broadcast_to(freqs.astype(table.dtype),
+                             (w, freqs.shape[0])).reshape(-1)
+        out = out.reshape(-1).at[flat].add(f).reshape(table.shape)
+    return out

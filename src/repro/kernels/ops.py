@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core import sketch as sk
 from repro.kernels.hashes import make_plan
+from repro.kernels.hier_update import hier_update_pallas, make_hier_plan
 from repro.kernels.sketch_update import padded_table_size, sketch_update_pallas
 from repro.kernels.sketch_update_conservative import (
     conservative_chunk_b,
@@ -45,6 +46,28 @@ MODES = ("linear", "conservative")
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def check_linear_kernel_freqs(freqs: np.ndarray, table_dtype) -> None:
+    """Reject frequencies the linear one-hot kernels cannot represent.
+
+    The int path uses a two-12-bit-limb split whose f32 partial sums are
+    exact only for magnitudes < 2^24, so that bound applies to |f|, not
+    just positive f -- and negative frequencies are rejected outright
+    rather than silently relying on arithmetic-shift limb behaviour.
+    Float tables are unconstrained (turnstile / gradient weights).  Shared
+    by KernelSketch (flat) and KernelHierarchy (fused multi-level).
+    """
+    if freqs.size == 0 or not jnp.issubdtype(table_dtype, jnp.integer):
+        return
+    if np.abs(freqs).max() >= _MAX_KERNEL_FREQ:
+        raise ValueError(
+            "per-arrival |frequency| >= 2^24 overflows the int-table "
+            "limb split: use the core.sketch path")
+    if freqs.min() < 0:
+        raise ValueError(
+            "negative frequencies are not supported on int tables: "
+            "use the core.sketch path (or a float32 table)")
 
 
 class KernelSketch:
@@ -86,15 +109,7 @@ class KernelSketch:
         if self.mode == "conservative":
             sk.check_conservative_freqs(freqs, self.table.dtype)
             return
-        if jnp.issubdtype(self.table.dtype, jnp.integer):
-            if np.abs(freqs).max() >= _MAX_KERNEL_FREQ:
-                raise ValueError(
-                    "per-arrival |frequency| >= 2^24 overflows the int-table "
-                    "limb split: use the core.sketch path")
-            if freqs.min() < 0:
-                raise ValueError(
-                    "negative frequencies are not supported on int tables: "
-                    "use the core.sketch path (or a float32 table)")
+        check_linear_kernel_freqs(freqs, self.table.dtype)
 
     def update(self, items, freqs) -> None:
         items = np.asarray(items, dtype=np.uint32)
@@ -226,3 +241,117 @@ class KernelSketch:
     def table_view(self) -> np.ndarray:
         """Read-only unpadded table copy (inspection/tests; any mode)."""
         return np.asarray(self.table[:, : self.spec.table_size])
+
+
+class KernelHierarchy:
+    """Hierarchy whose level tables live concatenated + padded for the fused
+    single-launch Pallas update (kernels/hier_update.py).
+
+    The ingest counterpart of the one-launch query kernel: every stream
+    block is folded into ALL levels by one pallas_call against the
+    ``[w, sum_L h_L_pad]`` concatenated table, hashing each item once per
+    row and deriving the level cells by the mixed-radix cascade.  Linear
+    mode only -- the conservative update's row-coupling min forces a
+    sequential per-level fold; conservative hierarchies take
+    core.hierarchy.update_conservative (which shares the same index
+    cascade) instead.
+
+    :meth:`state` materializes the standard ``HierarchyState`` view (per
+    level: unpadded table slice + prefix-sliced shared params), cached
+    until the next ingest, so the descent/query stack runs unchanged on
+    kernel-ingested hierarchies.
+    """
+
+    def __init__(self, hspec, key: jax.Array, *, tile_h: int = 512,
+                 block_b: int = 1024, dtype=jnp.int32,
+                 interpret: Optional[bool] = None):
+        from repro.core import hierarchy as hh
+
+        self._hh = hh
+        self.hspec = hspec
+        self.hplan = make_hier_plan(hspec, tile_h)
+        self.params = sk.init_params(hspec.levels[-1], key)  # shared family
+        self.block_b = int(block_b)
+        self.table = jnp.zeros((hspec.base.width, self.hplan.padded_cols),
+                               dtype=dtype)
+        self.interpret = default_interpret() if interpret is None else interpret
+        self._state_cache: Optional[object] = None
+
+    @classmethod
+    def from_state(cls, hspec, state, *, tile_h: int = 512,
+                   block_b: int = 1024,
+                   interpret: Optional[bool] = None) -> "KernelHierarchy":
+        """Adopt an existing (shared-params) HierarchyState's tables+params."""
+        self = cls.__new__(cls)
+        from repro.core import hierarchy as hh
+
+        self._hh = hh
+        self.hspec = hspec
+        self.hplan = make_hier_plan(hspec, tile_h)
+        self.params = state.states[-1].params
+        self.block_b = int(block_b)
+        self.interpret = default_interpret() if interpret is None else interpret
+        self._state_cache = None
+        self.load_state(state)
+        return self
+
+    # -- state interop -------------------------------------------------------
+    def load_state(self, state) -> None:
+        """Pack a HierarchyState into the concatenated padded table.
+
+        The state must carry the shared-prefix params of
+        ``init_hierarchy`` (validated host-side): the fused kernel hashes
+        with the finest params only and derives every level by division,
+        which is meaningless for independently drawn per-level params.
+        """
+        if not self._hh.params_share_prefix(state):
+            raise ValueError(
+                "KernelHierarchy requires the shared per-group hash family "
+                "(level params must be prefix slices of the finest "
+                "level's, as drawn by init_hierarchy)")
+        self.params = state.states[-1].params
+        parts = []
+        for st_l, h_l, pad_l in zip(state.states, self.hplan.level_sizes,
+                                    self.hplan.level_pads):
+            if st_l.table.shape[1] != h_l:
+                raise ValueError("state tables do not match the spec")
+            parts.append(jnp.pad(st_l.table, ((0, 0), (0, pad_l - h_l))))
+        self.table = jnp.concatenate(parts, axis=1)
+        self._state_cache = None
+
+    def state(self):
+        """HierarchyState view (sliced, unpadded); cached until next ingest."""
+        if self._state_cache is None:
+            states = []
+            for l, (off, h_l) in enumerate(zip(self.hplan.level_offsets,
+                                               self.hplan.level_sizes)):
+                states.append(sk.SketchState(
+                    params=self._hh.level_params(self.hspec, self.params, l),
+                    table=self.table[:, off : off + h_l]))
+            self._state_cache = self._hh.HierarchyState(states=tuple(states))
+        return self._state_cache
+
+    # -- ingest --------------------------------------------------------------
+    def update(self, items, freqs) -> None:
+        """Fold a weighted block: one fused launch per fixed-size sub-block."""
+        items = np.asarray(items, dtype=np.uint32)
+        freqs = np.asarray(freqs)
+        check_linear_kernel_freqs(freqs, self.table.dtype)
+        schema = self.hspec.levels[-1].schema
+        n_fine = self.hspec.n_levels - 1
+        b = self.block_b
+        for s in range(0, items.shape[0], b):
+            blk_i = items[s : s + b]
+            blk_f = freqs[s : s + b]
+            if blk_i.shape[0] < b:
+                pad = b - blk_i.shape[0]
+                blk_i = np.pad(blk_i, ((0, pad), (0, 0)))
+                blk_f = np.pad(blk_f, (0, pad))
+            # group-major column order = the finest level's chunk layout
+            ordered = np.asarray(self.hspec.level_items(n_fine, blk_i))
+            chunks = schema.module_chunks(jnp.asarray(ordered))
+            self.table = hier_update_pallas(
+                self.hplan, self.table, chunks, jnp.asarray(blk_f),
+                self.params.q, self.params.r, interpret=self.interpret,
+            )
+        self._state_cache = None

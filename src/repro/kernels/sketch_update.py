@@ -71,7 +71,8 @@ def padded_table_size(h: int, tile_h: int) -> int:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("plan", "tile_h", "interpret")
+    jax.jit, static_argnames=("plan", "tile_h", "interpret"),
+    donate_argnums=(1,),
 )
 def sketch_update_pallas(
     plan: IndexPlan,
@@ -84,7 +85,12 @@ def sketch_update_pallas(
     tile_h: int = 512,
     interpret: bool = True,
 ) -> jax.Array:
-    """Fold one stream block into the (padded) table. Returns the new table."""
+    """Fold one stream block into the (padded) table. Returns the new table.
+
+    The table buffer is DONATED (effective on CPU and TPU): per-block
+    ingest accumulates in place instead of copying the table every call.
+    Callers must rebind to the returned table (KernelSketch.update does).
+    """
     w, h_pad = table.shape
     if h_pad % tile_h:
         raise ValueError(f"padded table width {h_pad} not a multiple of {tile_h}")

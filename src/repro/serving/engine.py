@@ -147,20 +147,29 @@ class SketchTopKEndpoint:
     excluded from the cell-wise merge and psum paths of
     core/distributed.py.
 
+    Every ingest path hashes each item ONCE and derives all level indices
+    by the mixed-radix cascade (core/hierarchy.py's shared per-group hash
+    family).  ``use_update_kernel=True`` additionally folds each block into
+    all level tables with the fused single-launch Pallas kernel
+    (kernels/ops.KernelHierarchy); linear mode only -- a conservative
+    endpoint silently keeps the jnp per-level sequential folds, which
+    already share the cascade's one hash pass.
+
     Linear endpoints shard naturally: run one per ingest worker and fold
     with ``merge_from`` at query time (tables cell-wise, exact by
     linearity; candidate summaries via the mergeable-summaries rule).
     """
 
     def __init__(self, base_spec, key, *, max_candidates_per_group: int = 1 << 16,
-                 use_kernel: bool = False, dtype=jnp.int32,
-                 mode: str = "linear"):
+                 use_kernel: bool = False, use_update_kernel: bool = False,
+                 dtype=jnp.int32, mode: str = "linear"):
         from repro.core import hierarchy as hh
         from repro.core.summary import SpaceSaving
 
         if mode not in ("linear", "conservative"):
             raise ValueError(f"mode must be 'linear' or 'conservative', got {mode!r}")
         self._hh = hh
+        self._kh = None
         self.hspec = hh.HierarchySpec.from_spec(base_spec)
         self.state = hh.init_hierarchy(self.hspec, key, dtype=dtype)
         self.max_candidates = int(max_candidates_per_group)
@@ -171,6 +180,28 @@ class SketchTopKEndpoint:
             SpaceSaving(self.max_candidates, len(g))
             for g in base_spec.partition
         ]
+        if use_update_kernel and mode == "linear":
+            from repro.kernels.ops import KernelHierarchy
+
+            # the endpoint's state moves into the kernel wrapper's
+            # concatenated padded table; ``state`` stays visible as a
+            # lazily sliced view (see the property below)
+            self._kh = KernelHierarchy.from_state(self.hspec, self._state)
+            self._state = None
+
+    @property
+    def state(self):
+        """The hierarchy state (assembled lazily on the fused-kernel path)."""
+        if self._kh is not None:
+            return self._kh.state()
+        return self._state
+
+    @state.setter
+    def state(self, value) -> None:
+        if getattr(self, "_kh", None) is not None:
+            self._kh.load_state(value)
+        else:
+            self._state = value
 
     def ingest(self, items: np.ndarray, freqs: Optional[np.ndarray] = None) -> None:
         items = np.asarray(items, dtype=np.uint32)
@@ -182,9 +213,19 @@ class SketchTopKEndpoint:
         if self.mode == "conservative":
             from repro.core.sketch import check_conservative_freqs
             check_conservative_freqs(freqs, self.state.states[0].table.dtype)
+        if self._kh is not None:
+            # reject kernel-unrepresentable weights BEFORE touching pools
+            # or totals, so a failed ingest leaves the endpoint unchanged
+            from repro.kernels.ops import check_linear_kernel_freqs
+            check_linear_kernel_freqs(freqs, self._kh.table.dtype)
         self.total += int(freqs.sum())
         for j, g in enumerate(self.hspec.base.partition):
             self._pools[j].offer(items[:, list(g)], freqs)
+        if self._kh is not None:
+            # fused single-launch path: KernelHierarchy pads blocks to its
+            # own fixed block_b (zero-frequency pad rows are no-ops)
+            self._kh.update(items, freqs)
+            return
         # pad blocks to the next power of two so the jitted multi-level
         # update compiles O(log B) variants, not one per block length
         # (zero-frequency pad items are no-ops and stay out of the pools)
@@ -235,6 +276,7 @@ class SketchTopKEndpoint:
         linear in the stream and must never enter the psum sync path, so
         promotion is refused (same contract as merge_from).
         """
+        from repro.core.sketch import SketchState
         from repro.core.summary import SpaceSaving
         from repro.serving.sharded_topk import ShardedTopKService
 
@@ -250,8 +292,15 @@ class SketchTopKEndpoint:
             sync_every=sync_every, use_kernel=self.use_kernel,
             dtype=self.state.states[0].table.dtype)
         # the service's freshly drawn params are discarded: the promoted
-        # state keeps this endpoint's params so existing tables stay valid
-        svc.merged = self.state
+        # state keeps this endpoint's params so existing tables stay valid.
+        # Tables are COPIED, not aliased: the endpoint's ingest path
+        # donates its table buffers (hierarchy.update_jit), so a later
+        # ep.ingest() would delete buffers the service still reads.
+        # Params are never donated, so sharing them is safe.
+        state = self.state
+        svc.merged = self._hh.HierarchyState(states=tuple(
+            SketchState(params=st.params, table=jnp.array(st.table))
+            for st in state.states))
         svc.total = self.total
         svc._shard_pools[0] = [SpaceSaving.fold([p]) for p in self._pools]
         svc._global_pools = [SpaceSaving.fold([p]) for p in self._pools]

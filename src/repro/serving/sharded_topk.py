@@ -5,9 +5,12 @@ pipeline (core/hierarchy.py) on a data-parallel device mesh:
 
   ingest   the stream block is split over the mesh's data axes and every
            shard folds its slice into per-level *local* tables
-           (core.distributed.lazy_hierarchy_update -- no collective on the
-           ingest hot path), while per-shard space-saving pools
-           (core/summary.py) admit candidate group values;
+           (core.distributed.lazy_hierarchy_update -- ONE shard_map over
+           all levels: each item is hashed once and every level's cell
+           derived by the mixed-radix cascade; no collective on the
+           ingest hot path, local tables donated into the jitted fold),
+           while per-shard space-saving pools (core/summary.py) admit
+           candidate group values;
   sync     at explicit sync points the local tables are psum-merged per
            level (core.distributed.merge_local_hierarchy -- exact by
            linearity) into the serving snapshot, and the shard pools fold
@@ -135,10 +138,16 @@ class ShardedTopKService:
         # every call, which would dominate the ingest hot path.  Params are
         # dynamic args (not closed over) so a promoted endpoint's params
         # (to_sharded swaps self.merged) hit the same compiled executable.
+        # The local tables are DONATED: the per-shard fold (which now
+        # hashes each item once and cascades to every level inside one
+        # shard_map) accumulates in place instead of copying every level
+        # table per block.  ``ingest`` rebinds self._local to the result,
+        # which is the only live reference.
         self._fold = jax.jit(
             lambda local, params, it, fr: dist.lazy_hierarchy_update(
                 self.hspec, self.mesh, self.data_axes, local, params,
-                it, fr))
+                it, fr),
+            donate_argnums=(0,))
         self._merge = jax.jit(
             lambda local: dist.merge_local_hierarchy(
                 self.mesh, self.data_axes, local))

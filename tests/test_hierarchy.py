@@ -59,11 +59,16 @@ def test_zipf_recovery_no_false_negatives():
     assert exact <= got, f"false negatives: {exact - got}"
 
     # false positives: each reported key's true frequency must be within
-    # the leaf-level CM slack eps*L of the threshold
+    # the leaf-level CM slack eps*L of the threshold.  The slack constant
+    # accounts for the max-over-candidates selection effect (thousands of
+    # keys reach the leaf, so the worst overestimate governs, not the
+    # per-key bound) and for the shared per-group family: leaf-colliding
+    # keys collide at every ancestor too, so ancestor levels cannot prune
+    # leaf-collision false positives (the leaf bound itself is unchanged).
     uniq, inv = np.unique(wl.stream.items, axis=0, return_inverse=True)
     tot = np.bincount(inv, weights=wl.stream.freqs.astype(np.float64))
     true_of = {tuple(k): int(v) for k, v in zip(uniq.tolist(), tot)}
-    eps_l = 8.0 / base.table_size * wl.stream.total
+    eps_l = 32.0 / base.table_size * wl.stream.total
     for t in got:
         assert true_of[t] >= wl.threshold - eps_l, (t, true_of[t])
     # estimates are CM overestimates of the truth

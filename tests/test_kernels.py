@@ -35,11 +35,13 @@ def test_update_kernel_matches_oracle_int32(domains, part, ranges, w, tile_h, b)
     chunks = schema.module_chunks(jnp.asarray(items))
     h_pad = padded_table_size(spec.table_size, tile_h)
     t0 = jnp.zeros((w, h_pad), jnp.int32)
+    # oracle first: the pallas wrapper DONATES its table arg, so t0 is
+    # consumed by the kernel call
+    want = ref.sketch_update_ref(plan, t0, chunks, jnp.asarray(freqs),
+                                 params.q, params.r)
     got = sketch_update_pallas(plan, t0, chunks, jnp.asarray(freqs),
                                params.q, params.r, tile_h=tile_h,
                                interpret=True)
-    want = ref.sketch_update_ref(plan, t0, chunks, jnp.asarray(freqs),
-                                 params.q, params.r)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -56,11 +58,11 @@ def test_update_kernel_matches_oracle_float32(domains, part, ranges, w, tile_h, 
     chunks = schema.module_chunks(jnp.asarray(items))
     h_pad = padded_table_size(spec.table_size, tile_h)
     t0 = jnp.zeros((w, h_pad), jnp.float32)
+    want = ref.sketch_update_ref(plan, t0, chunks, jnp.asarray(vals),
+                                 params.q, params.r)
     got = sketch_update_pallas(plan, t0, chunks, jnp.asarray(vals),
                                params.q, params.r, tile_h=tile_h,
                                interpret=True)
-    want = ref.sketch_update_ref(plan, t0, chunks, jnp.asarray(vals),
-                                 params.q, params.r)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-4)
 
