@@ -1,0 +1,151 @@
+"""Windowed heavy-hitter benchmarks (core/window.py + windowed serving).
+
+Emitted as the common CSV rows and archived by CI as BENCH_WINDOW.json
+(run via ``python -m benchmarks.run --only window``):
+
+  * ``window/ingest_eN`` -- ingest + epoch-advance throughput of the
+    windowed service as the ring grows (N = 4/8/16 epochs).  The ingest
+    fold itself is epoch-count independent (one cascade fold into the head
+    slot + the running window sum); what the sweep watches is the advance
+    cost (one subtract) and any per-ring overhead creeping in.
+  * ``window/query_eN`` -- merged-window topk latency, incremental running
+    sum vs lazy O(N)-slot resum, same ring sizes.
+  * ``window/accuracy_MODE`` -- live ARE / heavy-hitter F1 / F2 error of
+    tumbling vs decay vs landmark over a DRIFTING stream (key popularity
+    re-permuted every few epochs, streams.dstream.drifting_batches).  The
+    windowed modes track the drift; landmark keeps averaging over dead
+    heavy sets and degrades -- the number BENCH_WINDOW.json exists to
+    prove.
+
+CPU/interpret numbers: orchestration + jnp scatter costs, not kernel
+speed (docs/benchmarks.md, "interpret-mode caveat").
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import sketch as sk
+from repro.serving.windowed_topk import WindowedTopKService
+from repro.streams import DStreamHarness, drifting_batches, zipf_hh_workload
+
+_EPOCHS_SWEEP = (4, 8, 16)
+_BLOCKS_PER_EPOCH = 2
+
+
+def _workload():
+    wl = zipf_hh_workload(n_occurrences=200_000, n_edges=20_000, seed=0)
+    spec = sk.mod_sketch_spec(wl.stream.schema, [(0,), (1,)], (256, 256), 4)
+    return wl, spec
+
+
+def window_ingest_throughput() -> None:
+    wl, spec = _workload()
+    items, freqs = wl.stream.items, wl.stream.freqs
+    for n_epochs in _EPOCHS_SWEEP:
+        svc = WindowedTopKService(spec, jax.random.PRNGKey(0),
+                                  n_epochs=n_epochs)
+        n_blocks = n_epochs * _BLOCKS_PER_EPOCH
+        edges = np.linspace(0, len(items), n_blocks + 1).astype(int)
+        # warmup: compile the fold + advance paths
+        svc.ingest(items[: edges[1]], freqs[: edges[1]])
+        svc.advance()
+        t0 = time.perf_counter()
+        for b, (s, e) in enumerate(zip(edges[:-1], edges[1:])):
+            if b and b % _BLOCKS_PER_EPOCH == 0:
+                svc.advance()
+            svc.ingest(items[s:e], freqs[s:e])
+        jax.block_until_ready(svc.state().states[-1].table)
+        dt = time.perf_counter() - t0
+        rows_per_s = len(items) / max(dt, 1e-9)
+        emit(f"window/ingest_e{n_epochs}", dt * 1e6 / n_blocks,
+             f"epochs={n_epochs};blocks={n_blocks};"
+             f"rows_per_s={rows_per_s:.3e}")
+
+
+def window_query_latency() -> None:
+    wl, spec = _workload()
+    items, freqs = wl.stream.items, wl.stream.freqs
+    for n_epochs in _EPOCHS_SWEEP:
+        svcs = {
+            "inc": WindowedTopKService(spec, jax.random.PRNGKey(0),
+                                       n_epochs=n_epochs, incremental=True),
+            "lazy": WindowedTopKService(spec, jax.random.PRNGKey(0),
+                                        n_epochs=n_epochs, incremental=False),
+        }
+        n_blocks = n_epochs * _BLOCKS_PER_EPOCH
+        edges = np.linspace(0, len(items), n_blocks + 1).astype(int)
+        for svc in svcs.values():
+            for b, (s, e) in enumerate(zip(edges[:-1], edges[1:])):
+                if b and b % _BLOCKS_PER_EPOCH == 0:
+                    svc.advance()
+                svc.ingest(items[s:e], freqs[s:e])
+        for tag, svc in svcs.items():
+            svc.topk(16)                       # warmup/compile
+            t0 = time.perf_counter()
+            reps = 3
+            for _ in range(reps):
+                top_items, top_est = svc.topk(16)
+            dt = (time.perf_counter() - t0) / reps
+            emit(f"window/query_e{n_epochs}_{tag}", dt * 1e6,
+                 f"epochs={n_epochs};merge={tag};k=16;"
+                 f"top1={int(top_est[0]) if len(top_est) else 0}")
+
+
+def window_mode_accuracy() -> None:
+    """Drifting stream: the accuracy case for windowing over since-boot.
+
+    Two scores per mode.  ``are``/``recall``/``f2_rel_err`` measure the
+    sketch against the mode's OWN exact semantics (how well the tables
+    approximate what they claim to hold -- sketch error proper).
+    ``recent_topk_recall`` measures the mode's top-k against the exact
+    top-k of the LAST ``n_epochs`` epochs -- the "what is heavy right
+    now" question real traffic asks.  Under drift the windowed modes
+    track it and landmark keeps voting for dead heavy sets."""
+    from repro.streams.dstream import ExactWindowCounter
+
+    spec = sk.mod_sketch_spec(
+        sk.KeySchema(domains=(1 << 20, 1 << 20)), [(0,), (1,)], (32, 32), 4)
+    n_epochs, n_batches, k = 4, 24, 32
+    for mode, decay in (("tumbling", 1.0), ("decay", 0.5),
+                        ("landmark", 1.0)):
+        svc = WindowedTopKService(spec, jax.random.PRNGKey(0),
+                                  n_epochs=n_epochs, window_mode=mode,
+                                  decay=decay)
+        harness = DStreamHarness(svc, k=k, phi=0.01)
+        recent = ExactWindowCounter(n_epochs, mode="tumbling")
+        recent_recalls = []
+        t0 = time.perf_counter()
+        clock = 0
+        for batch in drifting_batches(
+                (1 << 20, 1 << 20), n_batches, rows_per_batch=4_000,
+                batches_per_epoch=2, drift_every=3, n_keys=2_000, seed=0):
+            while clock < batch.t:
+                recent.advance()
+                clock += 1
+            recent.ingest(batch.items, batch.freqs)
+            harness.step(batch)
+            truth = recent.window_counts()
+            exact_top = {kk for kk, _ in sorted(
+                truth.items(), key=lambda kv: (-kv[1], kv[0]))[:k]}
+            got_items, _ = svc.topk(k)
+            got_top = {tuple(r) for r in got_items.tolist()}
+            recent_recalls.append(
+                len(exact_top & got_top) / max(len(exact_top), 1))
+        dt = time.perf_counter() - t0
+        # steady-state accuracy: average over the post-warmup half
+        tail = harness.reports[len(harness.reports) // 2:]
+        are = float(np.mean([r.are_topk for r in tail]))
+        recall = float(np.mean([r.recall for r in tail]))
+        f2_err = float(np.mean([r.f2_rel_err for r in tail]))
+        recent_recall = float(np.mean(recent_recalls[len(recent_recalls) // 2:]))
+        emit(f"window/accuracy_{mode}", dt * 1e6 / n_batches,
+             f"mode={mode};decay={decay};are={are:.4f};recall={recall:.3f};"
+             f"recent_topk_recall={recent_recall:.3f};"
+             f"f2_rel_err={f2_err:.4f};epochs={n_epochs};batches={n_batches}")
+
+
+ALL = [window_ingest_throughput, window_query_latency, window_mode_accuracy]

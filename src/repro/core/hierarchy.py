@@ -43,11 +43,13 @@ level indices nest exactly,
     idx_L            = idx_{m-1} // (r_{L+1} * ... * r_{m-1})
 
 so one hash pass over the full key yields every level's cell index by an
-integer division (:func:`hierarchy_indices`).  Ingest cost per item drops
-from ~L hash passes + L kernel launches (the old per-level path, kept as
-:func:`update_reference`) to ONE hash pass + L fused table adds; the Pallas
-path (kernels/hier_update.py) folds a stream block into all level tables in
-a single launch against the level-concatenated padded table.  The
+integer division (:func:`hierarchy_indices`).  Every ingest surface runs
+this cascade; per-level hashing survives only as the bit-exactness oracle
+:func:`update_reference`.  Ingest cost per item is ONE hash pass + L fused
+table adds instead of the reference's ~L hash passes + L kernel launches;
+the Pallas path (kernels/hier_update.py) folds a stream block into all
+level tables in a single launch against the level-concatenated padded
+table.  The
 conservative update gets the same cascade for its index computation and then
 runs the per-level sequential folds (the min couples rows, so the folds
 themselves stay per level).
@@ -55,7 +57,10 @@ themselves stay per level).
 Every level's table is linear in the stream, so a hierarchy merges cell-wise
 per level and composes with the distributed runtime (core/distributed.py)
 exactly like a single sketch: see :func:`merge` and
-:func:`sharded_hierarchy_build`.
+:func:`sharded_hierarchy_build`.  The same linearity (plus the shared hash
+draw) is what lets core/window.py keep a ring of per-epoch hierarchies that
+merge, subtract, and decay cell-wise; docs/architecture.md has the full
+layer map and the bit-exactness contracts.
 
 The candidate-extension query is the hot path (P prefixes x C child values
 per step).  The mixed radix makes it separable: within level L,

@@ -1,0 +1,319 @@
+"""Sliding-window & time-decayed hierarchies: a ring of per-epoch tables.
+
+Real traffic asks "top-k in the last hour", not "top-k since boot".  Every
+level table of a (linearly built) hierarchy is linear in the stream, so
+windowing is cell-wise arithmetic on per-epoch tables:
+
+    ring slot e : hierarchy tables of the items ingested during epoch e
+    window      : merge of the live epochs' tables (expired epochs dropped
+                  from the lazy merge, or subtracted from a running sum --
+                  both exact by linearity on integer tables)
+
+All epochs share ONE per-group hash family (the same draw
+``core.hierarchy.init_hierarchy`` makes for the ingest cascade), so epoch
+tables are merge-compatible by construction: the merged window tables are
+bit-identical to the tables of a hierarchy freshly built over exactly the
+window's stream contents (enforced by tests/test_window.py).  Every query
+path of the hierarchy -- the recursive descent, the Pallas candidate
+kernel, the marginal queries -- runs unchanged against the merged state.
+
+Three window modes (:class:`WindowSpec.mode`):
+
+  * ``tumbling``  -- the last ``n_epochs`` epochs, equally weighted.  The
+    ring's oldest slot is zeroed on :func:`advance_window`; the lazy merge
+    sums the live slots (a serving-side running sum may instead subtract
+    the expiring tables -- identical result by linearity, see
+    serving/windowed_topk.py).
+  * ``landmark``  -- everything since boot.  Expiring slots fold into a
+    ``retired`` accumulator instead of being lost, so memory stays at
+    ``n_epochs + 1`` table stacks while the merge covers the whole stream.
+  * ``decay``     -- exponential decay over the last ``n_epochs`` epochs:
+    an epoch of age ``a`` contributes with weight ``decay**a``.  The merge
+    is the scale-then-fold (Horner) recurrence over live epochs, oldest
+    first::
+
+        acc <- acc * decay + table_e
+
+    which is still linear in each epoch's stream, so sharding / psum /
+    donation machinery carries over unchanged.  Tables are float32 (the
+    scale leaves the integers); the recompute-from-scratch reference
+    replays the identical recurrence, so parity is still bit-exact.
+
+Linear mode only: conservative (Estan-Varghese) tables are not linear in
+the stream, so per-epoch tables could be neither merged nor subtracted --
+every windowed entry point refuses ``mode="conservative"`` via the same
+``core.distributed.require_linear`` guard the sharded surfaces use.
+
+See docs/architecture.md for where this sits in the stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hierarchy as hh
+from repro.core import sketch as sk
+from repro.core.distributed import require_linear
+
+
+# --------------------------------------------------------------------------
+# Spec
+# --------------------------------------------------------------------------
+
+_MODES = ("tumbling", "landmark", "decay")
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSpec:
+    """Static description of a windowed hierarchy.
+
+    ``n_epochs`` is the ring capacity W: tumbling/decay windows cover the
+    last W epochs, landmark keeps W live slots plus the retired
+    accumulator.  ``decay`` is the per-epoch multiplier for mode="decay"
+    (ignored otherwise)."""
+    base: sk.SketchSpec
+    n_epochs: int
+    mode: str = "tumbling"
+    decay: float = 1.0
+
+    def __post_init__(self):
+        if self.n_epochs < 1:
+            raise ValueError("n_epochs >= 1 required")
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got {self.mode!r}")
+        if self.mode == "decay" and not (0.0 < self.decay <= 1.0):
+            raise ValueError("decay in (0, 1] required for mode='decay'")
+
+    @functools.cached_property
+    def hspec(self) -> hh.HierarchySpec:
+        return hh.HierarchySpec.from_spec(self.base)
+
+
+class WindowState(NamedTuple):
+    """Ring of per-epoch level tables sharing one hash family.
+
+    ``level_params[l]`` is level l's prefix slice of the one shared draw
+    (exactly what ``init_hierarchy`` produces);  ``ring[e][l]`` is epoch
+    slot e's level-l table;  ``retired[l]`` accumulates expired epochs in
+    landmark mode (zeros otherwise);  ``head`` is the slot receiving
+    ingest;  ``epoch`` counts advances since boot (current epoch id)."""
+    level_params: Tuple[sk.SketchParams, ...]
+    ring: Tuple[Tuple[jax.Array, ...], ...]
+    retired: Tuple[jax.Array, ...]
+    head: int
+    epoch: int
+
+
+def _hier_state(wspec: WindowSpec, state: WindowState,
+                tables: Tuple[jax.Array, ...]) -> hh.HierarchyState:
+    """Assemble a HierarchyState view over one table stack (shared params)."""
+    return hh.HierarchyState(states=tuple(
+        sk.SketchState(params=p, table=t)
+        for p, t in zip(state.level_params, tables)))
+
+
+def init_window(wspec: WindowSpec, key: jax.Array, *,
+                dtype=None, mode: str = "linear") -> WindowState:
+    """Draw the shared hash family and zero every ring slot.
+
+    ``dtype`` defaults to int32 (exact integer arithmetic; merge and
+    subtract are bit-exact) and to float32 for decay mode, whose scale
+    leaves the integers.  ``mode`` exists only to be refused: windowed
+    tables must merge and subtract cell-wise, which conservative tables
+    cannot (require_linear -- same contract as every sharded surface)."""
+    require_linear(mode, "window.init_window")
+    if dtype is None:
+        dtype = jnp.float32 if wspec.mode == "decay" else jnp.int32
+    if wspec.mode == "decay" and not jnp.issubdtype(dtype, jnp.floating):
+        raise ValueError(
+            "decay mode scales tables by a float factor each epoch; use a "
+            "float table dtype (int tables would truncate the decay)")
+    template = hh.init_hierarchy(wspec.hspec, key, dtype=dtype)
+    zeros = tuple(st.table for st in template.states)
+    return WindowState(
+        level_params=tuple(st.params for st in template.states),
+        ring=tuple(tuple(jnp.zeros_like(t) for t in zeros)
+                   for _ in range(wspec.n_epochs)),
+        retired=tuple(jnp.zeros_like(t) for t in zeros),
+        head=0,
+        epoch=0,
+    )
+
+
+# --------------------------------------------------------------------------
+# Ingest / advance
+# --------------------------------------------------------------------------
+
+def window_update(wspec: WindowSpec, state: WindowState,
+                  items, freqs, *, mode: str = "linear") -> WindowState:
+    """Fold a weighted key block into the CURRENT epoch's tables.
+
+    Runs the shared-family ingest cascade (one hash pass, every level's
+    cell by mixed-radix division -- core.hierarchy.update_jit) against the
+    head slot; the head tables are donated into the jitted fold, so
+    callers rebind the state to the return value like every other
+    streaming build here."""
+    require_linear(mode, "window.window_update")
+    items = jnp.asarray(np.asarray(items, dtype=np.uint32))
+    freqs = jnp.asarray(freqs)
+    head_state = _hier_state(wspec, state, state.ring[state.head])
+    new_head = hh.update_jit(wspec.hspec, head_state, items, freqs)
+    ring = list(state.ring)
+    ring[state.head] = tuple(st.table for st in new_head.states)
+    return state._replace(ring=tuple(ring))
+
+
+@jax.jit
+def _add_tables(a, b):
+    return tuple(x + y for x, y in zip(a, b))
+
+
+def advance_window(wspec: WindowSpec, state: WindowState) -> WindowState:
+    """Close the current epoch and open a fresh one.
+
+    The slot the head moves into holds the OLDEST live epoch; its tables
+    expire: dropped (zeroed) in tumbling/decay mode, folded into the
+    ``retired`` accumulator in landmark mode (nothing ever leaves a
+    landmark window).  Advancing before the ring is full expires an empty
+    slot, which is a no-op by linearity."""
+    new_head = (state.head + 1) % wspec.n_epochs
+    expiring = state.ring[new_head]
+    retired = state.retired
+    if wspec.mode == "landmark":
+        retired = _add_tables(retired, expiring)
+    ring = list(state.ring)
+    ring[new_head] = tuple(jnp.zeros_like(t) for t in expiring)
+    return state._replace(ring=tuple(ring), retired=retired,
+                          head=new_head, epoch=state.epoch + 1)
+
+
+# --------------------------------------------------------------------------
+# Lazy query-time merge
+# --------------------------------------------------------------------------
+
+def live_slots(wspec: WindowSpec, state: WindowState) -> Tuple[int, ...]:
+    """Ring slots of the live epochs, oldest -> newest (head last).
+
+    Before the ring has wrapped, only ``epoch + 1`` slots have ever
+    received ingest; the rest are all-zero and excluded (including them
+    would not change any sum, but Horner decay weights depend on the
+    number of folded terms, so the slot list must be exact)."""
+    n_live = min(state.epoch + 1, wspec.n_epochs)
+    return tuple((state.head - a) % wspec.n_epochs
+                 for a in reversed(range(n_live)))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _merge_sum(n_levels: int, stacks):
+    """Per-level cell-wise sum over a sequence of table stacks."""
+    return tuple(
+        functools.reduce(jnp.add, [s[l] for s in stacks])
+        for l in range(n_levels))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _merge_horner(n_levels: int, decay: float, stacks):
+    """Scale-then-fold over table stacks, OLDEST FIRST:
+    acc = acc * decay + table, so age-a epochs carry weight decay**a."""
+    out = []
+    for l in range(n_levels):
+        acc = stacks[0][l]
+        for s in stacks[1:]:
+            acc = acc * jnp.asarray(decay, acc.dtype) + s[l]
+        out.append(acc)
+    return tuple(out)
+
+
+def merged_state(wspec: WindowSpec, state: WindowState) -> hh.HierarchyState:
+    """The window's hierarchy, lazily merged from the live epoch tables.
+
+    tumbling: sum of live slots;  landmark: retired + sum of live slots;
+    decay: Horner scale-then-fold oldest->newest.  The result is a
+    first-class HierarchyState -- find_heavy_hitters, the Pallas candidate
+    kernel, marginal queries all run against it unchanged -- and for
+    tumbling/landmark int tables it is bit-identical to a hierarchy built
+    from scratch over the window's stream contents (tests/test_window.py).
+    """
+    stacks = [state.ring[s] for s in live_slots(wspec, state)]
+    n = wspec.hspec.n_levels
+    if wspec.mode == "decay":
+        tables = _merge_horner(n, float(wspec.decay), tuple(stacks))
+    else:
+        if wspec.mode == "landmark":
+            stacks = [state.retired] + stacks
+        tables = _merge_sum(n, tuple(stacks))
+    return _hier_state(wspec, state, tables)
+
+
+def subtract_tables(window_sum: Tuple[jax.Array, ...],
+                    expiring: Tuple[jax.Array, ...]) -> Tuple[jax.Array, ...]:
+    """The incremental-expiry primitive: running window sum minus an
+    expiring epoch's tables, per level.  Exact on integer tables by
+    linearity -- ``sum(live) == sum(prev live) - expired`` cell by cell --
+    so a serving cache maintained this way stays bit-identical to the lazy
+    resum (the equivalence test in tests/test_window.py).  Linear tables
+    only, like every windowed surface."""
+    return _sub_tables(window_sum, expiring)
+
+
+@jax.jit
+def _sub_tables(a, b):
+    return tuple(x - y for x, y in zip(a, b))
+
+
+# --------------------------------------------------------------------------
+# Recompute-from-scratch references (test oracles)
+# --------------------------------------------------------------------------
+
+def reference_window_state(
+    wspec: WindowSpec,
+    key: jax.Array,
+    epoch_blocks,          # sequence of (items, freqs) per epoch, oldest first
+    *,
+    dtype=None,
+) -> hh.HierarchyState:
+    """Oracle: the merged window built from scratch, no ring involved.
+
+    ``epoch_blocks`` must be the LIVE epochs' streams (already truncated /
+    retained according to the mode), oldest first.  tumbling/landmark:
+    one fresh hierarchy over the concatenation (linearity makes epoch
+    boundaries irrelevant).  decay: one fresh hierarchy per epoch, folded
+    through the same Horner recurrence as :func:`merged_state` -- the
+    identical float operations in the identical order, hence bit-exact."""
+    if dtype is None:
+        dtype = jnp.float32 if wspec.mode == "decay" else jnp.int32
+    hspec = wspec.hspec
+    if wspec.mode != "decay":
+        its = [np.asarray(i, dtype=np.uint32) for i, _ in epoch_blocks]
+        frs = [np.asarray(f) for _, f in epoch_blocks]
+        n_mod = wspec.base.schema.modularity
+        items = (np.concatenate(its, axis=0) if its
+                 else np.zeros((0, n_mod), np.uint32))
+        freqs = np.concatenate(frs) if frs else np.zeros((0,), np.int64)
+        state = hh.init_hierarchy(hspec, key, dtype=dtype)
+        if len(items):
+            state = hh.update_jit(hspec, state, jnp.asarray(items),
+                                  jnp.asarray(freqs))
+        return state
+    stacks = []
+    params_state = None
+    for items, freqs in epoch_blocks:
+        st = hh.init_hierarchy(hspec, key, dtype=dtype)
+        if len(np.asarray(items)):
+            st = hh.update_jit(
+                hspec, st,
+                jnp.asarray(np.asarray(items, dtype=np.uint32)),
+                jnp.asarray(freqs))
+        params_state = st
+        stacks.append(tuple(s.table for s in st.states))
+    if params_state is None:
+        return hh.init_hierarchy(hspec, key, dtype=dtype)
+    tables = _merge_horner(hspec.n_levels, float(wspec.decay), tuple(stacks))
+    return hh.HierarchyState(states=tuple(
+        sk.SketchState(params=s.params, table=t)
+        for s, t in zip(params_state.states, tables)))

@@ -1,9 +1,10 @@
 """Pallas TPU kernel: fold one stream block into ALL hierarchy levels in a
 single launch.
 
-The per-level ingest path pays L hash passes and L kernel launches per
-stream block.  Under the shared per-group hash family (core/hierarchy.py)
-the level indices nest in the mixed radix,
+Hierarchy ingest used to run per level -- L hash passes and L kernel
+launches per stream block (that path survives only as the parity
+reference, core.hierarchy.update_reference).  Under the shared per-group
+hash family (core/hierarchy.py) the level indices nest in the mixed radix,
 
     idx_L = idx_finest // (r_{L+1} * ... * r_{m-1}),
 
@@ -35,6 +36,9 @@ Bit-exactness: identical to per-level core.sketch.update on integer tables;
 for f32 tables exact whenever every per-cell partial sum is exactly
 representable (e.g. integer-valued weights < 2^24), tolerance-level
 otherwise (MXU accumulation order differs from scatter order).
+
+See docs/architecture.md ("Fused Pallas ingest") for where this kernel
+sits in the ingest dataflow.
 """
 from __future__ import annotations
 

@@ -12,4 +12,19 @@ from repro.streams.heavy_hitters import (  # noqa: F401
     ngram_hh_workload,
     zipf_hh_workload,
 )
-from repro.streams.stats import degree_stats, exact_marginals, observed_error  # noqa: F401
+from repro.streams.stats import (  # noqa: F401
+    average_relative_error,
+    degree_stats,
+    exact_f2,
+    exact_marginals,
+    observed_error,
+    sketch_f2_upper,
+)
+from repro.streams.dstream import (  # noqa: F401
+    Batch,
+    BatchReport,
+    DStreamHarness,
+    ExactWindowCounter,
+    drifting_batches,
+    timestamped_batches,
+)

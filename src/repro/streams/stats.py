@@ -1,4 +1,10 @@
-"""Exact stream statistics: ground truth + the paper's evaluation metric."""
+"""Exact stream statistics: ground truth + evaluation metrics.
+
+``observed_error`` is the paper's SVI-A4 aggregate metric;
+``average_relative_error`` / ``exact_f2`` / ``sketch_f2_upper`` are the
+live-accuracy metrics the batched streaming harness (streams/dstream.py)
+reports per batch against exact windowed ground truth.
+"""
 from __future__ import annotations
 
 from typing import Sequence, Tuple
@@ -11,6 +17,49 @@ def observed_error(est: np.ndarray, true: np.ndarray) -> float:
     est = np.asarray(est, dtype=np.float64)
     true = np.asarray(true, dtype=np.float64)
     return float(np.abs(est - true).sum() / max(float(true.sum()), 1.0))
+
+
+def average_relative_error(est: np.ndarray, true: np.ndarray) -> float:
+    """Mean per-item relative error: mean_i |est_i - true_i| / true_i.
+
+    The DStream-style live metric (per-key, unlike the mass-weighted
+    ``observed_error``): heavy and light queried keys count equally, so a
+    sketch that nails the head but garbles the queried tail is penalized.
+    Zero-truth rows contribute |est| per unit (denominator floored at 1)
+    instead of dividing by zero.  Empty query sets score 0.
+    """
+    est = np.asarray(est, dtype=np.float64)
+    true = np.asarray(true, dtype=np.float64)
+    if est.shape != true.shape:
+        raise ValueError(f"est/true shape mismatch: {est.shape} vs {true.shape}")
+    if est.size == 0:
+        return 0.0
+    return float(np.mean(np.abs(est - true) / np.maximum(true, 1.0)))
+
+
+def exact_f2(freqs: np.ndarray) -> float:
+    """Second frequency moment of a compressed stream: sum_i f_i**2."""
+    f = np.asarray(freqs, dtype=np.float64)
+    return float(np.dot(f, f))
+
+
+def sketch_f2_upper(table: np.ndarray) -> float:
+    """F2 upper bound from a linear Count-Min table: min over rows of the
+    row's sum of squared cells.
+
+    Each cell holds the sum of its colliding keys' frequencies, so a row's
+    sum of squares is F2 plus non-negative cross terms -- an overestimate
+    for every row; the min is the tightest.  (Unbiased F2 needs sign
+    hashes -- Count-Sketch / AMS -- which this table family does not carry;
+    the bound still tracks F2 well at the usual loads and is what the
+    streaming harness reports.)  Only meaningful for linearly built
+    tables: conservative cells under-count collisions, voiding the
+    row-wise >= F2 argument.
+    """
+    t = np.asarray(table, dtype=np.float64)
+    if t.ndim != 2:
+        raise ValueError(f"table must be [w, h], got shape {t.shape}")
+    return float(np.min(np.sum(t * t, axis=1)))
 
 
 def exact_marginals(items: np.ndarray, freqs: np.ndarray, cols: Sequence[int]) -> np.ndarray:

@@ -1,0 +1,171 @@
+"""streams/stats.py + streams/sampling.py: the evaluation-side helpers.
+
+These feed the live-accuracy harness (streams/dstream.py) and the paper's
+sampling pipeline, so their edge cases (empty query sets, zero truth,
+capacity boundaries) must be pinned down, not just the happy path.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import sketch as sk
+from repro.streams import (
+    average_relative_error,
+    degree_stats,
+    exact_f2,
+    exact_marginals,
+    observed_error,
+    sketch_f2_upper,
+    zipf_graph_stream,
+)
+from repro.streams.sampling import BernoulliSampler, ReservoirSampler
+
+
+# -- error metrics ----------------------------------------------------------
+
+def test_observed_error_mass_weighted():
+    est = np.array([12.0, 5.0, 3.0])
+    true = np.array([10.0, 5.0, 5.0])
+    assert observed_error(est, true) == pytest.approx(4.0 / 20.0)
+    assert observed_error(true, true) == 0.0
+
+
+def test_average_relative_error_per_key():
+    est = np.array([12.0, 5.0, 3.0])
+    true = np.array([10.0, 5.0, 6.0])
+    # mean(0.2, 0.0, 0.5): each key counts equally, unlike observed_error
+    assert average_relative_error(est, true) == pytest.approx(0.7 / 3.0)
+
+
+def test_average_relative_error_edge_cases():
+    assert average_relative_error(np.array([]), np.array([])) == 0.0
+    # zero-truth rows floor the denominator at 1 instead of dividing by 0
+    assert average_relative_error(np.array([3.0]),
+                                  np.array([0.0])) == pytest.approx(3.0)
+    with pytest.raises(ValueError, match="shape"):
+        average_relative_error(np.array([1.0, 2.0]), np.array([1.0]))
+
+
+def test_exact_f2():
+    assert exact_f2(np.array([3, 4])) == 25.0
+    assert exact_f2(np.array([])) == 0.0
+
+
+def test_sketch_f2_upper_manual_table():
+    # row 0: keys 3 and 4 collide in one cell -> (3+4)^2 + 0 = 49
+    # row 1: they land apart -> 9 + 16 = 25 = exact F2; min picks row 1
+    table = np.array([[7.0, 0.0], [3.0, 4.0]])
+    assert sketch_f2_upper(table) == 25.0
+    with pytest.raises(ValueError, match="w, h"):
+        sketch_f2_upper(np.zeros(8))
+
+
+def test_sketch_f2_upper_bounds_exact_f2():
+    """Row-min of sum-of-squares >= F2 on a real linearly built table."""
+    stream = zipf_graph_stream(n_src=200, n_tgt=300, n_edges=1_500,
+                               n_occurrences=10_000, seed=5)
+    spec = sk.count_min_spec(stream.schema, 256, 3)
+    state = sk.build_sketch(spec, jax.random.PRNGKey(0),
+                            stream.items, stream.freqs)
+    f2 = exact_f2(stream.freqs)
+    assert sketch_f2_upper(np.asarray(state.table)) >= f2 > 0.0
+
+
+# -- exact ground-truth helpers --------------------------------------------
+
+def test_exact_marginals():
+    items = np.array([[1, 10], [1, 20], [2, 10]], dtype=np.uint32)
+    freqs = np.array([5, 7, 2])
+    # marginal over module 0: key 1 carries 12, key 2 carries 2
+    assert exact_marginals(items, freqs, [0]).tolist() == [12.0, 12.0, 2.0]
+    # full-key marginal is the frequency itself
+    assert exact_marginals(items, freqs, [0, 1]).tolist() == [5.0, 7.0, 2.0]
+
+
+def test_degree_stats():
+    items = np.array([[1, 10], [1, 20], [2, 10]], dtype=np.uint32)
+    freqs = np.array([5, 7, 2])
+    stats = degree_stats(items, freqs)
+    assert stats["n_sources"] == 2
+    assert stats["n_targets"] == 2
+    assert stats["total"] == 14
+    assert stats["max_freq"] == 7
+    assert stats["distinct"] == 3
+
+
+# -- Bernoulli thinning -----------------------------------------------------
+
+def test_bernoulli_sampler_validates_p():
+    with pytest.raises(ValueError, match="p in"):
+        BernoulliSampler(0.0)
+    with pytest.raises(ValueError, match="p in"):
+        BernoulliSampler(1.5)
+
+
+def test_bernoulli_sampler_p1_keeps_everything():
+    s = BernoulliSampler(1.0)
+    items = np.array([[1, 2], [3, 4]], dtype=np.uint32)
+    freqs = np.array([5, 7])
+    s.offer(items, freqs)
+    got_items, got_freqs = s.sample()
+    assert np.array_equal(got_items, items)
+    assert np.array_equal(got_freqs, freqs)
+
+
+def test_bernoulli_sampler_thins_mass():
+    s = BernoulliSampler(0.1, seed=1)
+    items = np.arange(2_000, dtype=np.uint32).reshape(-1, 2)
+    freqs = np.full(1_000, 50)
+    s.offer(items, freqs)
+    _, got_freqs = s.sample()
+    kept = got_freqs.sum()
+    assert 0 < kept < freqs.sum()
+    # binomial mean 5000, sd ~67: a seeded draw sits well inside 10 sd
+    assert abs(kept - 5_000) < 670
+
+
+def test_bernoulli_sampler_empty():
+    got_items, got_freqs = BernoulliSampler(0.5).sample()
+    assert got_items.shape[0] == 0 and got_freqs.shape == (0,)
+
+
+# -- weighted reservoir -----------------------------------------------------
+
+def test_reservoir_under_capacity_keeps_everything():
+    r = ReservoirSampler(capacity=10)
+    items = np.array([[1, 2], [3, 4]], dtype=np.uint32)
+    freqs = np.array([5, 7])
+    r.offer(items, freqs)
+    got_items, got_freqs = r.sample()
+    order = np.argsort(got_items[:, 0])
+    assert np.array_equal(got_items[order], items)
+    assert np.array_equal(got_freqs[order], freqs)
+
+
+def test_reservoir_respects_capacity():
+    r = ReservoirSampler(capacity=16, seed=2)
+    for start in range(0, 300, 100):
+        items = np.arange(2 * start, 2 * (start + 100),
+                          dtype=np.uint32).reshape(-1, 2)
+        r.offer(items, np.ones(100, dtype=np.int64))
+    got_items, got_freqs = r.sample()
+    assert got_items.shape == (16, 2)
+    assert got_freqs.shape == (16,)
+
+
+def test_reservoir_weight_bias():
+    """A-ES priorities u**(1/w): one overwhelming weight survives any
+    seeded draw against a sea of weight-1 rows."""
+    r = ReservoirSampler(capacity=8, seed=3)
+    light = np.arange(400, dtype=np.uint32).reshape(-1, 2)
+    r.offer(light, np.ones(200, dtype=np.int64))
+    heavy = np.array([[9999, 9999]], dtype=np.uint32)
+    r.offer(heavy, np.array([10_000]))
+    got_items, _ = r.sample()
+    assert (9999, 9999) in {tuple(row) for row in got_items.tolist()}
+
+
+def test_reservoir_empty():
+    got_items, got_freqs = ReservoirSampler(capacity=4).sample()
+    assert got_items.shape[0] == 0 and got_freqs.shape == (0,)

@@ -1,0 +1,314 @@
+"""Windowed hierarchies + windowed serving: bit-exactness and expiry.
+
+The contracts under test (docs/architecture.md, "Window vs recompute"):
+
+  * merged window tables are bit-identical to a hierarchy rebuilt from
+    scratch over exactly the live epochs' blocks, for all three modes
+    (decay compares against a reference replaying the identical Horner
+    recurrence, so even the float tables match bitwise);
+  * the incremental running window sum (add on ingest, subtract on
+    expiry) equals the lazy re-sum, tables and top-k;
+  * a landmark window is the since-boot endpoint, bit for bit;
+  * the descent keeps its no-false-negative guarantee across epoch
+    expiry (property-checked over zipf and ngram streams);
+  * conservative tables are refused at every windowed entry point;
+  * merge_from composes aligned windowed shards exactly and refuses
+    mismatched specs/clocks.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+from repro.core import sketch as sk
+from repro.core import window as win
+from repro.serving.engine import SketchTopKEndpoint
+from repro.serving.windowed_topk import WindowedTopKService
+from repro.streams import (
+    DStreamHarness,
+    ExactWindowCounter,
+    ngram_hh_workload,
+    timestamped_batches,
+    zipf_hh_workload,
+)
+
+KEY = jax.random.PRNGKey(7)
+
+
+@functools.lru_cache(maxsize=None)
+def _workload(which: str):
+    if which == "zipf":
+        wl = zipf_hh_workload(n_src=500, n_tgt=800, n_edges=3_000,
+                              n_occurrences=20_000, seed=3)
+    else:
+        wl = ngram_hh_workload(vocab_size=128, n=2, n_sequences=16,
+                               seq_len=128, seed=3)
+    spec = sk.mod_sketch_spec(wl.stream.schema, [(0,), (1,)], (32, 32), 3)
+    return wl, spec
+
+
+def _epoch_blocks(stream, n_epochs: int):
+    """Cut the compressed stream into one block per epoch."""
+    edges = np.linspace(0, len(stream.items), n_epochs + 1).astype(int)
+    return [(stream.items[s:e], stream.freqs[s:e])
+            for s, e in zip(edges[:-1], edges[1:])]
+
+
+def _drive(wspec, blocks, *, dtype=None):
+    """Raw core/window.py loop: one block per epoch, advance between."""
+    state = win.init_window(wspec, KEY, dtype=dtype)
+    for b, (it, fr) in enumerate(blocks):
+        if b:
+            state = win.advance_window(wspec, state)
+        state = win.window_update(wspec, state, it, fr)
+    return state
+
+
+def _tables(hier_state):
+    return [np.asarray(s.table) for s in hier_state.states]
+
+
+# -- merged window vs recompute-from-scratch oracle ------------------------
+
+@pytest.mark.parametrize("mode,decay", [("tumbling", 1.0),
+                                        ("landmark", 1.0),
+                                        ("decay", 0.5)])
+def test_merged_window_bitexact_vs_reference(mode, decay):
+    wl, spec = _workload("zipf")
+    n_epochs, total_epochs = 3, 7
+    wspec = win.WindowSpec(base=spec, n_epochs=n_epochs, mode=mode,
+                           decay=decay)
+    blocks = _epoch_blocks(wl.stream, total_epochs)
+    state = _drive(wspec, blocks)
+    assert state.epoch == total_epochs - 1
+    # live = the last n_epochs epochs (landmark keeps everything)
+    live = blocks if mode == "landmark" else blocks[-n_epochs:]
+    ref = win.reference_window_state(wspec, KEY, live)
+    got, want = _tables(win.merged_state(wspec, state)), _tables(ref)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype
+        assert np.array_equal(g, w)   # bitwise, floats included
+
+
+def test_merged_window_before_ring_wraps():
+    """Fewer epochs than the ring holds: only ever-used slots count
+    (Horner weights depend on the number of folded terms)."""
+    wl, spec = _workload("zipf")
+    wspec = win.WindowSpec(base=spec, n_epochs=5, mode="decay", decay=0.25)
+    blocks = _epoch_blocks(wl.stream, 2)
+    state = _drive(wspec, blocks)
+    assert win.live_slots(wspec, state) == (0, 1)
+    ref = win.reference_window_state(wspec, KEY, blocks)
+    for g, w in zip(_tables(win.merged_state(wspec, state)), _tables(ref)):
+        assert np.array_equal(g, w)
+
+
+# -- incremental running sum vs lazy resum ---------------------------------
+
+def test_incremental_service_equals_lazy():
+    wl, spec = _workload("zipf")
+    svc_inc = WindowedTopKService(spec, KEY, n_epochs=3, incremental=True)
+    svc_lazy = WindowedTopKService(spec, KEY, n_epochs=3, incremental=False)
+    for b, (it, fr) in enumerate(_epoch_blocks(wl.stream, 7)):
+        if b:
+            svc_inc.advance()
+            svc_lazy.advance()
+        svc_inc.ingest(it, fr)
+        svc_lazy.ingest(it, fr)
+    for g, w in zip(_tables(svc_inc.state()), _tables(svc_lazy.state())):
+        assert np.array_equal(g, w)
+    items_i, est_i = svc_inc.topk(10)
+    items_l, est_l = svc_lazy.topk(10)
+    assert np.array_equal(items_i, items_l)
+    assert np.array_equal(est_i, est_l)
+
+
+def test_decay_service_forces_lazy_merge():
+    _, spec = _workload("zipf")
+    svc = WindowedTopKService(spec, KEY, n_epochs=3, window_mode="decay",
+                              decay=0.5, incremental=True)
+    assert not svc.incremental   # no cheap incremental form under decay
+
+
+# -- landmark == since-boot endpoint ---------------------------------------
+
+def test_landmark_window_is_since_boot_endpoint():
+    wl, spec = _workload("zipf")
+    svc = WindowedTopKService(spec, KEY, n_epochs=3, window_mode="landmark")
+    endpoint = SketchTopKEndpoint(spec, KEY)
+    for b, (it, fr) in enumerate(_epoch_blocks(wl.stream, 7)):
+        if b:
+            svc.advance()
+        svc.ingest(it, fr)
+        endpoint.ingest(it, fr)
+    assert svc.total == endpoint.total
+    for g, w in zip(_tables(svc.state()), _tables(endpoint.state)):
+        assert np.array_equal(g, w)
+    items_s, est_s = svc.topk(10)
+    items_e, est_e = endpoint.topk(10)
+    # identical tables => identical per-key estimates; equal-estimate ties
+    # may order differently (the two surfaces' candidate pools iterate in
+    # different orders), so compare as key -> estimate maps
+    assert np.array_equal(np.sort(est_s), np.sort(est_e))
+    assert ({tuple(k): int(e) for k, e in zip(items_s.tolist(), est_s)}
+            == {tuple(k): int(e) for k, e in zip(items_e.tolist(), est_e)})
+
+
+# -- no false negatives across epoch expiry --------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4), st.sampled_from(["zipf", "ngram"]))
+def test_no_false_negative_across_expiry(n_epochs, which):
+    """Every exact heavy hitter of the LIVE window is reported, even after
+    the ring has expired as many epochs as it holds: expired epochs take
+    their candidate pools with them, but every live key sits in a live
+    pool and CM estimates of the live window never under-count."""
+    wl, spec = _workload(which)
+    svc = WindowedTopKService(spec, KEY, n_epochs=n_epochs)
+    blocks = _epoch_blocks(wl.stream, 2 * n_epochs)
+    for b, (it, fr) in enumerate(blocks):
+        if b:
+            svc.advance()
+        svc.ingest(it, fr)
+    live_it = np.concatenate([b[0] for b in blocks[-n_epochs:]], axis=0)
+    live_fr = np.concatenate([b[1] for b in blocks[-n_epochs:]])
+    uniq, inv = np.unique(live_it, axis=0, return_inverse=True)
+    tot = np.bincount(inv, weights=live_fr.astype(np.float64))
+    threshold = max(2, int(0.005 * tot.sum()))
+    exact = {tuple(r) for r, f in zip(uniq.tolist(), tot) if f >= threshold}
+    got_items, got_est = svc.heavy_hitters(threshold)
+    got = {tuple(r) for r in got_items.tolist()}
+    assert exact <= got, f"false negatives: {sorted(exact - got)[:5]}"
+    assert np.all(got_est >= threshold)
+
+
+def test_expired_keys_leave_the_candidate_sets():
+    """A key seen ONLY in expired epochs cannot re-enter the descent."""
+    _, spec = _workload("zipf")
+    svc = WindowedTopKService(spec, KEY, n_epochs=2)
+    dead = np.array([[7, 9]], dtype=np.uint32)
+    svc.ingest(dead, np.array([1000]))
+    for _ in range(2):                      # expire the epoch that saw it
+        svc.advance()
+        svc.ingest(np.array([[1, 2], [3, 4]], dtype=np.uint32),
+                   np.array([5, 6]))
+    for cand in svc.candidates():
+        assert not any(tuple(r) in {(7,), (9,)} for r in cand.tolist())
+    items, _ = svc.heavy_hitters(1)
+    assert (7, 9) not in {tuple(r) for r in items.tolist()}
+
+
+# -- conservative refusal ---------------------------------------------------
+
+def test_windowed_surfaces_refuse_conservative():
+    _, spec = _workload("zipf")
+    wspec = win.WindowSpec(base=spec, n_epochs=2)
+    with pytest.raises(ValueError, match="linear"):
+        win.init_window(wspec, KEY, mode="conservative")
+    state = win.init_window(wspec, KEY)
+    with pytest.raises(ValueError, match="linear"):
+        win.window_update(wspec, state, np.zeros((1, 2), np.uint32),
+                          np.ones(1), mode="conservative")
+    with pytest.raises(ValueError, match="linear"):
+        WindowedTopKService(spec, KEY, n_epochs=2, mode="conservative")
+
+
+def test_window_spec_validation():
+    _, spec = _workload("zipf")
+    with pytest.raises(ValueError, match="n_epochs"):
+        win.WindowSpec(base=spec, n_epochs=0)
+    with pytest.raises(ValueError, match="mode"):
+        win.WindowSpec(base=spec, n_epochs=2, mode="sliding")
+    with pytest.raises(ValueError, match="decay"):
+        win.WindowSpec(base=spec, n_epochs=2, mode="decay", decay=0.0)
+    with pytest.raises(ValueError, match="float"):
+        win.init_window(win.WindowSpec(base=spec, n_epochs=2, mode="decay",
+                                       decay=0.5), KEY, dtype=jnp.int32)
+
+
+# -- windowed sharding (merge_from) ----------------------------------------
+
+def test_merge_from_equals_single_service():
+    wl, spec = _workload("zipf")
+    single = WindowedTopKService(spec, KEY, n_epochs=3)
+    shard_a = WindowedTopKService(spec, KEY, n_epochs=3)
+    shard_b = WindowedTopKService(spec, KEY, n_epochs=3)
+    for b, (it, fr) in enumerate(_epoch_blocks(wl.stream, 5)):
+        if b:
+            for s in (single, shard_a, shard_b):
+                s.advance()
+        half = len(it) // 2
+        single.ingest(it, fr)
+        shard_a.ingest(it[:half], fr[:half])
+        shard_b.ingest(it[half:], fr[half:])
+    shard_a.merge_from(shard_b)
+    assert shard_a.total == single.total
+    for g, w in zip(_tables(shard_a.state()), _tables(single.state())):
+        assert np.array_equal(g, w)
+    items_m, est_m = shard_a.topk(10)
+    items_s, est_s = single.topk(10)
+    assert np.array_equal(items_m, items_s)
+    assert np.array_equal(est_m, est_s)
+
+
+def test_merge_from_refuses_mismatches():
+    _, spec = _workload("zipf")
+    a = WindowedTopKService(spec, KEY, n_epochs=3)
+    with pytest.raises(ValueError, match="WindowSpec"):
+        a.merge_from(WindowedTopKService(spec, KEY, n_epochs=4))
+    drifted = WindowedTopKService(spec, KEY, n_epochs=3)
+    drifted.advance()
+    with pytest.raises(ValueError, match="aligned"):
+        a.merge_from(drifted)
+    other_key = WindowedTopKService(spec, jax.random.PRNGKey(99), n_epochs=3)
+    with pytest.raises(ValueError, match="hash params"):
+        a.merge_from(other_key)
+
+
+# -- streaming harness ------------------------------------------------------
+
+def test_dstream_harness_reports():
+    wl, spec = _workload("zipf")
+    svc = WindowedTopKService(spec, KEY, n_epochs=2)
+    harness = DStreamHarness(svc, k=16, phi=0.005, sample_p=0.5)
+    reports = harness.run(timestamped_batches(
+        wl.stream.items, wl.stream.freqs, n_batches=6, batches_per_epoch=2))
+    assert len(reports) == 6
+    assert [r.epoch for r in reports] == [0, 0, 1, 1, 2, 2]
+    for r in reports:
+        assert r.recall == 1.0          # exact-candidate pools, CM >= true
+        assert 0.0 < r.precision <= 1.0
+        assert r.are_topk >= 0.0
+        assert r.f2_est >= r.f2_exact > 0.0   # row-min bound from above
+        assert r.f2_rel_err >= 0.0
+        assert r.window_total > 0
+    s_items, s_freqs = harness.sample()
+    assert s_items.shape[1] == wl.stream.items.shape[1]
+    assert 0 < s_freqs.sum() <= wl.stream.total
+
+
+def test_dstream_harness_rejects_time_travel():
+    from repro.streams import Batch
+    _, spec = _workload("zipf")
+    harness = DStreamHarness(WindowedTopKService(spec, KEY, n_epochs=2))
+    harness.step(Batch(t=2, items=np.array([[1, 2]], np.uint32),
+                       freqs=np.array([1])))
+    with pytest.raises(ValueError, match="non-decreasing"):
+        harness.step(Batch(t=1, items=np.array([[1, 2]], np.uint32),
+                           freqs=np.array([1])))
+
+
+def test_exact_window_counter_decay_weighting():
+    c = ExactWindowCounter(n_epochs=3, mode="decay", decay=0.5)
+    c.ingest(np.array([[1, 1]], np.uint32), np.array([8]))
+    c.advance()
+    c.ingest(np.array([[1, 1], [2, 2]], np.uint32), np.array([4, 2]))
+    c.advance()
+    c.ingest(np.array([[2, 2]], np.uint32), np.array([6]))
+    # ages: 2, 1, 0 -> weights 0.25, 0.5, 1.0
+    assert c.window_counts() == {(1, 1): 8 * 0.25 + 4 * 0.5,
+                                 (2, 2): 2 * 0.5 + 6 * 1.0}

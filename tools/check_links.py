@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Fail CI on broken intra-repo markdown links.
+
+    python tools/check_links.py README.md docs/*.md
+
+Scans every ``[text](target)`` and bare reference-style ``[text]: target``
+link in the given markdown files.  External targets (http/https/mailto)
+and pure in-page anchors (``#section``) are ignored; everything else is
+resolved relative to the linking file (fragments stripped) and must exist
+in the repository.  Exits 1 listing every broken link, 0 when clean --
+stdlib only, so the CI docs job can run it before installing anything.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline [text](target) -- target ends at the first unescaped ')';
+# reference definitions "[name]: target" at line start
+_INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def targets(text: str):
+    yield from _INLINE.findall(text)
+    yield from _REFDEF.findall(text)
+
+
+def check_file(md: Path) -> list:
+    broken = []
+    for raw in targets(md.read_text(encoding="utf-8")):
+        if raw.startswith(_EXTERNAL) or raw.startswith("#"):
+            continue
+        path = raw.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            broken.append((str(md), raw))
+    return broken
+
+
+def main(argv) -> int:
+    files = [Path(a) for a in argv]
+    if not files:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    missing_inputs = [f for f in files if not f.exists()]
+    if missing_inputs:
+        for f in missing_inputs:
+            print(f"input file not found: {f}", file=sys.stderr)
+        return 2
+    broken = [b for f in files for b in check_file(f)]
+    for src, target in broken:
+        print(f"BROKEN {src}: {target}")
+    checked = len(files)
+    if broken:
+        print(f"{len(broken)} broken link(s) across {checked} file(s)")
+        return 1
+    print(f"all intra-repo links resolve across {checked} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
