@@ -1,6 +1,7 @@
 """Warn-only diff of two BENCH_*.json artifacts (perf-trajectory CI step).
 
     python -m benchmarks.diff_bench OLD.json NEW.json [--threshold 1.30]
+                                                      [--seed-baseline]
 
 Compares rows by name and prints a ``::warning::`` line (GitHub Actions
 annotation syntax; plain text elsewhere) for every benchmark whose
@@ -9,14 +10,19 @@ for rows that disappeared.  ALWAYS exits 0: CI timing boxes are noisy, so
 the trajectory is recorded and surfaced, never enforced -- a sustained
 regression shows up as the same warning on consecutive runs.
 
-Missing/unreadable OLD file is not an error either (first run of a new
-artifact has no baseline yet).
+A missing, unreadable, or row-less OLD artifact is the first-run case,
+not an error: the diff reports "no prior" and, with ``--seed-baseline``,
+copies NEW into OLD's place so the very next run has a trajectory to
+diff against even when the surrounding cache step failed to provide one
+(a freshly added BENCH_*.json -- e.g. BENCH_MIGRATE.json -- starts its
+trajectory this way).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import shutil
 import sys
 
 
@@ -27,22 +33,48 @@ def _rows(path: str) -> dict:
             if r.get("us_per_call", -1) > 0}
 
 
+def _seed_baseline(args) -> None:
+    if not args.seed_baseline:
+        return
+    if not os.path.exists(args.new):
+        return
+    parent = os.path.dirname(os.path.abspath(args.old))
+    os.makedirs(parent, exist_ok=True)
+    shutil.copyfile(args.new, args.old)
+    print(f"seeded baseline {args.old} from {args.new}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("old")
     ap.add_argument("new")
     ap.add_argument("--threshold", type=float, default=1.30,
                     help="warn when new/old wall time exceeds this ratio")
+    ap.add_argument("--seed-baseline", action="store_true",
+                    help="when OLD is missing/empty/unparseable, copy NEW "
+                         "into its place so the next run has a baseline")
     args = ap.parse_args()
 
     if not os.path.exists(args.old):
-        print(f"no baseline at {args.old}; skipping diff (first run)")
+        print(f"no prior artifact at {args.old}; skipping diff (first run)")
+        _seed_baseline(args)
         return
     try:
         old = _rows(args.old)
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"could not parse prior artifact {args.old} ({e}); "
+              "treating as no prior")
+        _seed_baseline(args)
+        return
+    if not old:
+        print(f"prior artifact {args.old} has no usable rows (empty "
+              "trajectory); treating as no prior")
+        _seed_baseline(args)
+        return
+    try:
         new = _rows(args.new)
-    except (OSError, ValueError, KeyError) as e:
-        print(f"could not parse artifacts ({e}); skipping diff")
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"could not parse new artifact {args.new} ({e}); skipping diff")
         return
 
     regressions = improvements = 0

@@ -1,0 +1,142 @@
+"""Online auto-tune + hot-migration benchmarks -> BENCH_MIGRATE.json.
+
+Run via ``python -m benchmarks.run --only migrate``:
+
+  * ``migrate/accuracy_retuned`` / ``migrate/accuracy_stale`` -- the
+    headline accuracy pair: a SketchTopKEndpoint under the online
+    AutoTuner (serving/autotune.py) streams a module-skew-flip workload
+    (streams.dstream.skew_flip_batches); after the drift the tuner
+    re-optimizes the per-group ranges from live stats and hot-migrates.
+    Both rows score top-k ARE over the migrated endpoint's serving window
+    against a STALE-spec twin fed exactly the same window -- isolating the
+    spec effect.  The re-tuned ARE must be strictly lower; this pair is
+    the artifact's reason to exist.
+  * ``migrate/double_write_overhead`` -- ingest cost with an open
+    double-write window vs without (the price of a migration in flight).
+  * ``migrate/cutover`` -- wall time of the cutover ingest itself (state
+    adoption is reference swapping; the fold dominates).
+
+CPU/interpret numbers: orchestration + jnp scatter costs, not kernel
+speed (docs/benchmarks.md, "interpret-mode caveat").
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import sketch as sk
+from repro.core.hashing import KeySchema
+from repro.serving.autotune import AutoTuner
+from repro.serving.engine import SketchTopKEndpoint
+from repro.streams import average_relative_error, skew_flip_batches
+
+_DOMAINS = (1 << 12, 1 << 12)
+_BATCHES = 16
+_ROWS = 3_000
+_H, _W = 1_024, 4
+
+
+def _stale_spec(schema: KeySchema) -> sk.SketchSpec:
+    # ranges tuned for a skewed module 0 / wide module 1; the stream
+    # flips that halfway through
+    return sk.mod_sketch_spec(schema, [(0,), (1,)],
+                              (max(2, _H // 64), 64), _W)
+
+
+def migrate_accuracy_drift() -> None:
+    schema = KeySchema(domains=_DOMAINS)
+    key = jax.random.PRNGKey(0)
+    live = SketchTopKEndpoint(_stale_spec(schema), key)
+    tuner = AutoTuner(live, jax.random.fold_in(key, 1),
+                      retune_every=12_000, warmup=6_000,
+                      min_improvement=0.9, sample_k=256, min_threshold=1,
+                      search="ranges")
+    batches = list(skew_flip_batches(_DOMAINS, _BATCHES, _ROWS, seed=0))
+
+    window_start = 0
+    t0 = time.perf_counter()
+    for b, batch in enumerate(batches):
+        live.ingest(batch.items, batch.freqs)
+        d = tuner.step()
+        if d is not None and d.migrated:
+            window_start = b + 1       # successor absorbs from next block
+    us = (time.perf_counter() - t0) * 1e6 / _BATCHES
+
+    # stale twin + exact counts over the migrated endpoint's window
+    frozen = SketchTopKEndpoint(_stale_spec(schema), key)
+    exact: dict = {}
+    for batch in batches[window_start:]:
+        frozen.ingest(batch.items, batch.freqs)
+        for it, f in zip(batch.items.tolist(), batch.freqs.tolist()):
+            exact[tuple(it)] = exact.get(tuple(it), 0) + f
+    top = sorted(exact.items(), key=lambda kv: -kv[1])[:32]
+    q = np.array([k for k, _ in top], dtype=np.uint32)
+    true = np.array([v for _, v in top], dtype=np.int64)
+
+    def _are(ep):
+        est = np.asarray(sk.query(ep.hspec.levels[-1], ep.state.states[-1],
+                                  q)).astype(np.int64)
+        return average_relative_error(true, est)
+
+    n_mig = sum(d.migrated for d in tuner.decisions)
+    emit("migrate/accuracy_retuned", us,
+         f"are={_are(live):.4f};migrations={n_mig};"
+         f"ranges={'x'.join(map(str, live.hspec.base.ranges))};"
+         f"window_blocks={_BATCHES - window_start}")
+    emit("migrate/accuracy_stale", us,
+         f"are={_are(frozen):.4f};"
+         f"ranges={'x'.join(map(str, frozen.hspec.base.ranges))};"
+         f"window_blocks={_BATCHES - window_start}")
+
+
+def migrate_double_write_overhead() -> None:
+    schema = KeySchema(domains=_DOMAINS)
+    key = jax.random.PRNGKey(0)
+    spec = _stale_spec(schema)
+    new = sk.mod_sketch_spec(schema, [(0,), (1,)], (64, 16), _W)
+    blocks = list(skew_flip_batches(_DOMAINS, 8, _ROWS, seed=1))
+
+    def _stream_through(migrating: bool) -> float:
+        ep = SketchTopKEndpoint(spec, key)
+        if migrating:
+            ep.begin_migration(new, jax.random.fold_in(key, 2),
+                               warmup=1 << 40)          # never cuts over
+        # warm BOTH folds' jit caches (the successor compiles its own
+        # spec's executables) so the ratio is steady-state double-write
+        # cost, not compile time
+        ep.ingest(blocks[0].items, blocks[0].freqs)
+        ep.ingest(blocks[1].items, blocks[1].freqs)
+        t0 = time.perf_counter()
+        for b in blocks[2:]:
+            ep.ingest(b.items, b.freqs)
+        return (time.perf_counter() - t0) * 1e6 / (len(blocks) - 2)
+
+    single = _stream_through(False)
+    double = _stream_through(True)
+    emit("migrate/double_write_overhead", double,
+         f"single_us={single:.1f};ratio={double / max(single, 1e-9):.2f}")
+
+
+def migrate_cutover_latency() -> None:
+    schema = KeySchema(domains=_DOMAINS)
+    key = jax.random.PRNGKey(0)
+    spec = _stale_spec(schema)
+    new = sk.mod_sketch_spec(schema, [(0,), (1,)], (64, 16), _W)
+    blocks = list(skew_flip_batches(_DOMAINS, 4, _ROWS, seed=2))
+    ep = SketchTopKEndpoint(spec, key)
+    for b in blocks[:3]:
+        ep.ingest(b.items, b.freqs)
+    warm = int(blocks[3].freqs.sum())
+    ep.begin_migration(new, jax.random.fold_in(key, 3), warmup=warm)
+    t0 = time.perf_counter()
+    ep.ingest(blocks[3].items, blocks[3].freqs)         # crosses warmup
+    us = (time.perf_counter() - t0) * 1e6
+    assert not ep.migrating
+    emit("migrate/cutover", us, f"warmup_mass={warm}")
+
+
+ALL = [migrate_accuracy_drift, migrate_double_write_overhead,
+       migrate_cutover_latency]

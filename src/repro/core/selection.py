@@ -69,3 +69,28 @@ def choose_sketch(
     spec = candidates[choice]
     mod_ranges = candidates.get("mod-sketch", spec).ranges
     return SelectionResult(choice=choice, spec=spec, sigma=sigma, mod_ranges=mod_ranges)
+
+
+def migration_gain(
+    current: sk.SketchSpec,
+    proposed: sk.SketchSpec,
+    items: np.ndarray,
+    freqs: np.ndarray,
+    key: jax.Array,
+) -> Tuple[float, float]:
+    """Thm 4/5 criterion applied to a hot-migration decision.
+
+    Builds both specs over the SAME weighted sample (the live proxy
+    sample from streams/livestats.py in the online setting) and returns
+    ``(sigma_current, sigma_proposed)``.  The smaller cell-value standard
+    deviation predicts the smaller estimation error with high probability
+    (Cantelli), so a migration is worth its double-write window when
+    ``sigma_proposed`` undercuts ``sigma_current`` by a real margin --
+    serving/autotune.py requires ``sigma_proposed < min_improvement *
+    sigma_current`` before triggering one.
+    """
+    sigma_cur = sample_cell_std(current, jax.random.fold_in(key, 0),
+                                items, freqs)
+    sigma_new = sample_cell_std(proposed, jax.random.fold_in(key, 1),
+                                items, freqs)
+    return sigma_cur, sigma_new

@@ -158,6 +158,14 @@ class SketchTopKEndpoint:
     Linear endpoints shard naturally: run one per ingest worker and fold
     with ``merge_from`` at query time (tables cell-wise, exact by
     linearity; candidate summaries via the mergeable-summaries rule).
+
+    Hot spec migration (serving/migration.py): ``begin_migration`` opens a
+    double-write window onto a fresh successor endpoint built on a
+    re-tuned spec; queries keep serving from the old tables until the
+    successor has absorbed ``warmup`` stream mass, then the endpoint cuts
+    over to the successor's state wholesale and frees the old tables.
+    Linear mode only; ``merge_from``/``to_sharded`` are refused mid-window
+    (the successor would not see the same state change).
     """
 
     def __init__(self, base_spec, key, *, max_candidates_per_group: int = 1 << 16,
@@ -170,6 +178,8 @@ class SketchTopKEndpoint:
             raise ValueError(f"mode must be 'linear' or 'conservative', got {mode!r}")
         self._hh = hh
         self._kh = None
+        self._migration = None
+        self._use_update_kernel = bool(use_update_kernel)
         self.hspec = hh.HierarchySpec.from_spec(base_spec)
         self.state = hh.init_hierarchy(self.hspec, key, dtype=dtype)
         self.max_candidates = int(max_candidates_per_group)
@@ -203,13 +213,8 @@ class SketchTopKEndpoint:
         else:
             self._state = value
 
-    def ingest(self, items: np.ndarray, freqs: Optional[np.ndarray] = None) -> None:
-        items = np.asarray(items, dtype=np.uint32)
-        if items.shape[0] == 0:
-            return
-        if freqs is None:
-            freqs = np.ones(items.shape[0], dtype=np.int64)
-        freqs = np.asarray(freqs)
+    def _ingest_active(self, items: np.ndarray, freqs: np.ndarray) -> None:
+        """Fold one normalized block into the ACTIVE (serving) tables."""
         if self.mode == "conservative":
             from repro.core.sketch import check_conservative_freqs
             check_conservative_freqs(freqs, self.state.states[0].table.dtype)
@@ -236,9 +241,89 @@ class SketchTopKEndpoint:
         self.state = fold(self.hspec, self.state, jnp.asarray(items),
                           jnp.asarray(freqs))
 
+    def ingest(self, items: np.ndarray,
+               freqs: Optional[np.ndarray] = None) -> None:
+        items = np.asarray(items, dtype=np.uint32)
+        if items.shape[0] == 0:
+            return
+        if freqs is None:
+            freqs = np.ones(items.shape[0], dtype=np.int64)
+        freqs = np.asarray(freqs)
+        self._ingest_active(items, freqs)
+        if self._migration is not None:
+            # double-write window: the successor sees every block verbatim
+            # (unpadded -- it pads its own blocks exactly like a fresh
+            # endpoint would, which is what keeps cutover bit-identical
+            # to a fresh build on the new spec)
+            self._migration.offer(items, freqs)
+            if self._migration.ready:
+                self._cutover()
+
     def candidates(self) -> List[np.ndarray]:
         """Per-group candidate value arrays from the space-saving pools."""
         return [p.values() for p in self._pools]
+
+    # -- hot spec migration (serving/migration.py) --------------------------
+
+    @property
+    def migrating(self) -> bool:
+        return self._migration is not None
+
+    @property
+    def migration_progress(self) -> float:
+        """Warmup progress in [0, 1]; 1.0 when no migration is in flight."""
+        return 1.0 if self._migration is None else self._migration.progress
+
+    def begin_migration(self, new_spec, key, *, warmup: int) -> None:
+        """Open a double-write window onto a fresh endpoint on ``new_spec``.
+
+        From the next ``ingest`` on, every block folds into BOTH the
+        active tables and a successor endpoint freshly built from
+        ``new_spec``/``key`` (same pool capacity, table dtype, and kernel
+        settings as this endpoint).  Queries keep answering from the
+        active tables until the successor has absorbed ``warmup`` stream
+        mass (sum of ingested frequencies); the ingest that crosses the
+        threshold cuts over: the successor's state becomes this
+        endpoint's state wholesale and the old tables are freed.
+
+        Linear mode only -- conservative tables are excluded from every
+        migration consumer (auto-tuning, re-meshing) and refused here via
+        the same guard as the sharded surfaces.  One migration at a time.
+        """
+        from repro.core.distributed import require_linear
+        from repro.serving.migration import SpecMigration
+
+        require_linear(self.mode, "SketchTopKEndpoint.begin_migration")
+        if self._migration is not None:
+            raise ValueError(
+                "a spec migration is already in flight "
+                f"({self._migration.progress:.0%} of warmup); one at a time")
+        incoming = SketchTopKEndpoint(
+            new_spec, key,
+            max_candidates_per_group=self.max_candidates,
+            use_kernel=self.use_kernel,
+            use_update_kernel=self._use_update_kernel,
+            dtype=self.state.states[0].table.dtype, mode="linear")
+        self._migration = SpecMigration(incoming, warmup)
+
+    def _cutover(self) -> None:
+        """Adopt the successor's state wholesale; free the old tables.
+
+        After this, the endpoint is bit-identical to a fresh endpoint
+        built on the new spec (same key) and fed exactly the blocks since
+        ``begin_migration`` -- the successor IS that endpoint.  ``total``
+        restarts at the post-warmup-start mass: estimates and totals
+        describe the same (new) stream window, which is what the top-k
+        descent's threshold scaling assumes.
+        """
+        inc = self._migration.incoming
+        self._migration = None
+        self.hspec = inc.hspec
+        self._kh = inc._kh
+        self._state = inc._state
+        self._pools = inc._pools
+        self.total = inc.total
+        # old tables/pools: last references dropped above -> freed
 
     def heavy_hitters(self, threshold: int,
                       candidates: Optional[List[np.ndarray]] = None,
@@ -278,8 +363,11 @@ class SketchTopKEndpoint:
         """
         from repro.core.sketch import SketchState
         from repro.core.summary import SpaceSaving
+        from repro.serving.migration import require_not_migrating
         from repro.serving.sharded_topk import ShardedTopKService
 
+        require_not_migrating(self._migration,
+                              "SketchTopKEndpoint.to_sharded")
         if self.mode != "linear":
             raise ValueError(
                 "to_sharded is only defined for linear endpoints: "
@@ -320,6 +408,12 @@ class SketchTopKEndpoint:
         or with the same params but permuted partition axes -- are garbage,
         so mismatches are rejected rather than silently accepted.
         """
+        from repro.serving.migration import require_not_migrating
+
+        require_not_migrating(self._migration,
+                              "SketchTopKEndpoint.merge_from")
+        require_not_migrating(other._migration,
+                              "SketchTopKEndpoint.merge_from (source side)")
         if self.mode != "linear" or other.mode != "linear":
             raise ValueError(
                 "merge_from is only defined for linear endpoints: "

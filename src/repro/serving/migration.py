@@ -1,0 +1,100 @@
+"""Hot spec migration: the double-write window between two sketch specs.
+
+A serving endpoint cannot atomically swap to a re-tuned SketchSpec: the
+new spec's tables start empty, so cutting over immediately would answer
+queries from a sketch that has seen nothing.  The migration protocol both
+serving surfaces (serving/engine.SketchTopKEndpoint,
+serving/sharded_topk.ShardedTopKService) implement on top of this holder:
+
+  1. ``begin_migration(new_spec, key, warmup=W)`` builds a FRESH successor
+     service on the new spec (empty tables, empty pools, total = 0);
+  2. every subsequent ingest **double-writes**: the block folds into the
+     active (old-spec) tables as always AND into the successor;
+  3. queries keep serving from the active tables -- the successor is
+     invisible until it has absorbed ``W`` stream mass;
+  4. once the successor's total reaches ``W``, the service **cuts over**:
+     the successor's state (tables, pools, hash params, total) becomes the
+     service's state wholesale and the old tables are freed (last
+     references dropped).
+
+Post-cutover the service is *bit-identical* to a fresh service built on
+the new spec from the same key and fed exactly the post-warmup-start
+stream -- the successor IS such a service, fed block-for-block.  That is
+the migration-correctness contract tests/test_migration.py enforces, and
+it composes with shard invariance: a sharded successor is itself
+shard-count invariant, so a migration is bit-identical across 1/2/4
+shards too.
+
+Linear mode only.  A conservative (Estan-Varghese) endpoint could in
+principle double-write, but its post-cutover total/estimate semantics
+could not be validated against the linear merge/fold contracts the rest
+of the stack leans on, and every consumer of migration (auto-tuning, the
+coming elastic re-meshing) runs on the linear psum paths -- so
+``begin_migration`` refuses conservative mode via
+``core.distributed.require_linear``, same as every sharded surface.
+
+Mutating the spec-carrying state mid-window is also refused:
+``merge_from`` / ``to_sharded`` during warmup would have to be replayed
+into the successor to keep the bit-identity contract, which is exactly
+the kind of silent divergence this layer exists to prevent
+(:func:`require_not_migrating`).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class SpecMigration:
+    """State holder for one in-flight migration: the successor + its window.
+
+    ``incoming`` is the freshly built successor service (any object with
+    ``ingest(items, freqs)`` and an integer ``total``); ``warmup`` is the
+    stream mass (sum of frequencies, the same unit as ``total``) the
+    successor must absorb before cutover.
+    """
+
+    def __init__(self, incoming, warmup: int):
+        warmup = int(warmup)
+        if warmup < 1:
+            raise ValueError("warmup must be >= 1 stream mass units")
+        if int(incoming.total) != 0:
+            raise ValueError(
+                "the migration successor must start empty (total == 0): "
+                "bit-identity with a fresh service on the new spec is the "
+                "whole contract")
+        self.incoming = incoming
+        self.warmup = warmup
+
+    def offer(self, items: np.ndarray, freqs: Optional[np.ndarray]) -> None:
+        """Double-write one ingested block into the successor."""
+        self.incoming.ingest(items, freqs)
+
+    @property
+    def ready(self) -> bool:
+        """True once the successor has absorbed the warmup mass."""
+        return int(self.incoming.total) >= self.warmup
+
+    @property
+    def progress(self) -> float:
+        """Warmup progress in [0, 1]."""
+        return min(1.0, int(self.incoming.total) / self.warmup)
+
+
+def require_not_migrating(migration: Optional[SpecMigration],
+                          entry: str) -> None:
+    """Refuse state-mutating entry points while a migration is in flight.
+
+    Folding foreign state (``merge_from``) or re-homing the tables
+    (``to_sharded``) mid-warmup would change the active state without the
+    successor seeing the same change, silently breaking the post-cutover
+    bit-identity contract -- refused loudly instead, finish (or never
+    start) the warmup first.
+    """
+    if migration is not None:
+        raise ValueError(
+            f"{entry} is not allowed while a spec migration is in its "
+            "warmup window: the successor would not see the same state "
+            "change and cutover would diverge from a fresh-build of the "
+            "new spec; wait for cutover (or don't start the migration)")

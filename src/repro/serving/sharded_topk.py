@@ -95,6 +95,13 @@ class ShardedTopKService:
     after that many ingested blocks (1 = synchronous, the sharded_build
     shape).  Pass ``sync_every=None`` for fully manual sync points; any
     query forces a sync first, so results are never stale.
+
+    Hot spec migration (serving/migration.py): ``begin_migration`` opens
+    a double-write window onto a successor service on the same mesh;
+    queries serve from the old tables until the successor has absorbed
+    ``warmup`` mass, then the service cuts over wholesale.  Because the
+    successor is itself shard-count invariant, a migration is
+    bit-identical across shard counts end to end.
     """
 
     def __init__(self, base_spec: sk.SketchSpec, key: jax.Array, mesh, *,
@@ -121,6 +128,8 @@ class ShardedTopKService:
         self.max_candidates = int(max_candidates_per_group)
         self.use_kernel = use_kernel
         self.sync_every = sync_every
+        self._dtype = dtype
+        self._migration = None
         self.total = 0
         self._blocks_since_sync = 0
         self._dirty = False
@@ -171,6 +180,7 @@ class ShardedTopKService:
             freqs = np.ones(items.shape[0], dtype=np.int64)
         freqs = np.asarray(freqs)
         self.total += int(freqs.sum())
+        raw_items, raw_freqs = items, freqs
         items, freqs, per = dist.pad_block_pow2(items, freqs, self.n_shards)
         for s in range(self.n_shards):
             sl = slice(s * per, (s + 1) * per)
@@ -185,6 +195,73 @@ class ShardedTopKService:
         self._blocks_since_sync += 1
         if self.sync_every and self._blocks_since_sync >= self.sync_every:
             self.sync()
+        if self._migration is not None:
+            # double-write window: the successor service pads/splits the
+            # raw block itself, exactly like a fresh service would -- the
+            # padded copy above must NOT leak into it
+            self._migration.offer(raw_items, raw_freqs)
+            if self._migration.ready:
+                self._cutover()
+
+    # -- hot spec migration (serving/migration.py) --------------------------
+
+    @property
+    def migrating(self) -> bool:
+        return self._migration is not None
+
+    @property
+    def migration_progress(self) -> float:
+        """Warmup progress in [0, 1]; 1.0 when no migration is in flight."""
+        return 1.0 if self._migration is None else self._migration.progress
+
+    def begin_migration(self, new_spec: sk.SketchSpec, key: jax.Array, *,
+                        warmup: int) -> None:
+        """Open a double-write window onto a successor service.
+
+        The successor is a fresh ShardedTopKService on ``new_spec`` over
+        the SAME mesh/data axes (same pool capacity, sync cadence, table
+        dtype); every subsequent block folds into both services.  Queries
+        keep serving from this service's merged tables until the
+        successor has absorbed ``warmup`` stream mass, then the service
+        cuts over to the successor's state wholesale and the old tables
+        are freed.  Shard-count invariance is preserved end to end: the
+        successor is itself bit-identical across shard counts.
+        """
+        from repro.serving.migration import SpecMigration
+
+        dist.require_linear(self.mode, "ShardedTopKService.begin_migration")
+        if self._migration is not None:
+            raise ValueError(
+                "a spec migration is already in flight "
+                f"({self._migration.progress:.0%} of warmup); one at a time")
+        incoming = ShardedTopKService(
+            new_spec, key, self.mesh, data_axes=self.data_axes,
+            max_candidates_per_group=self.max_candidates,
+            sync_every=self.sync_every, use_kernel=self.use_kernel,
+            dtype=self._dtype)
+        self._migration = SpecMigration(incoming, warmup)
+
+    def _cutover(self) -> None:
+        """Adopt the successor's state wholesale; free the old tables.
+
+        The successor's jit-cached fold/merge wrappers come along (they
+        close over the successor's static spec/mesh config, which is
+        exactly this service's config from here on); the old wrappers,
+        local/merged tables, and pools lose their last references.
+        """
+        inc = self._migration.incoming
+        self._migration = None
+        self.hspec = inc.hspec
+        self.merged = inc.merged
+        self._local = inc._local
+        self._dirty = inc._dirty
+        self._pools_dirty = inc._pools_dirty
+        self._blocks_since_sync = inc._blocks_since_sync
+        self._shard_pools = inc._shard_pools
+        self._global_pools = inc._global_pools
+        self.total = inc.total
+        self._fold = inc._fold
+        self._merge = inc._merge
 
     # -- sync (explicit psum point) -----------------------------------------
 

@@ -26,5 +26,12 @@ from repro.streams.dstream import (  # noqa: F401
     DStreamHarness,
     ExactWindowCounter,
     drifting_batches,
+    skew_flip_batches,
     timestamped_batches,
+)
+from repro.streams.livestats import (  # noqa: F401
+    LiveStats,
+    collect_live_stats,
+    group_marginal_mass,
+    propose_spec,
 )

@@ -147,6 +147,52 @@ def drifting_batches(schema_domains: Tuple[int, int], n_batches: int,
                     freqs=np.bincount(inv).astype(np.int64))
 
 
+def skew_flip_batches(schema_domains: Tuple[int, int], n_batches: int,
+                      rows_per_batch: int, *, batches_per_epoch: int = 1,
+                      flip_after: Optional[int] = None, narrow: int = 8,
+                      wide: int = 1_024, s: float = 1.4,
+                      seed: int = 0) -> Iterator[Batch]:
+    """Two-module stream whose per-MODULE marginal skew flips mid-stream.
+
+    Unlike :func:`drifting_batches` (which re-permutes the joint ranking
+    but keeps each module's marginal shape), this drifts the statistic the
+    composite-hash strategy is actually tuned to: before the flip, module
+    0's marginal is concentrated on ``narrow`` hot values (zipf ``s``)
+    while module 1 is near-uniform over ``wide`` values; after batch
+    ``flip_after`` (default: halfway) the roles swap.  Modules are drawn
+    independently, so the optimal per-group ranges (a, b) under the
+    paper's alpha-ratio rule flip with them -- a spec tuned on the first
+    phase is measurably stale on the second, which is what the online
+    auto-tuner (serving/autotune.py) exists to catch.
+    """
+    if flip_after is None:
+        flip_after = n_batches // 2
+    rng = np.random.default_rng(seed)
+    d0, d1 = schema_domains
+    narrow = min(narrow, d0, d1)
+    vals0 = rng.choice(d0, size=min(wide, d0), replace=False).astype(np.uint32)
+    vals1 = rng.choice(d1, size=min(wide, d1), replace=False).astype(np.uint32)
+
+    def _marginal_p(n_vals: int, skewed: bool) -> np.ndarray:
+        if skewed:
+            p = np.zeros(n_vals, dtype=np.float64)
+            p[:narrow] = np.arange(1, narrow + 1, dtype=np.float64) ** (-s)
+        else:
+            p = np.ones(n_vals, dtype=np.float64)
+        return p / p.sum()
+
+    for b in range(n_batches):
+        hot0 = b < flip_after                  # module 0 skewed first phase
+        c0 = rng.choice(len(vals0), size=rows_per_batch,
+                        p=_marginal_p(len(vals0), skewed=hot0))
+        c1 = rng.choice(len(vals1), size=rows_per_batch,
+                        p=_marginal_p(len(vals1), skewed=not hot0))
+        picked = np.stack([vals0[c0], vals1[c1]], axis=1)
+        uniq, inv = np.unique(picked, axis=0, return_inverse=True)
+        yield Batch(t=b // batches_per_epoch, items=uniq,
+                    freqs=np.bincount(inv).astype(np.int64))
+
+
 # --------------------------------------------------------------------------
 # Harness
 # --------------------------------------------------------------------------

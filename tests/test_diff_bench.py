@@ -1,0 +1,110 @@
+"""benchmarks/diff_bench.py: warn-only trajectory diff + first-run seeding.
+
+Runs the module as a subprocess exactly like the CI perf-trajectory step
+does, against synthetic BENCH_*.json artifacts in a tmp dir.  The
+contract: exit code 0 ALWAYS; regressions/disappearances surface as
+``::warning::`` lines; a missing/empty/unparseable prior is "no prior",
+and ``--seed-baseline`` turns that into a copied baseline so a freshly
+added artifact (BENCH_MIGRATE.json) starts its trajectory immediately.
+"""
+import json
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _artifact(rows):
+    return {"results": [
+        {"name": n, "us_per_call": us, "derived": {}, "raw": ""}
+        for n, us in rows]}
+
+
+def _write(path, payload):
+    with open(path, "w") as f:
+        if isinstance(payload, str):
+            f.write(payload)
+        else:
+            json.dump(payload, f)
+
+
+def _diff(*argv):
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.diff_bench", *argv],
+        capture_output=True, text=True, cwd=_ROOT, timeout=120)
+    return out
+
+
+def test_regression_and_disappearance_warn_but_exit_zero(tmp_path):
+    old = tmp_path / "OLD.json"
+    new = tmp_path / "NEW.json"
+    _write(old, _artifact([("a", 100.0), ("b", 100.0), ("gone", 50.0)]))
+    _write(new, _artifact([("a", 500.0), ("b", 101.0)]))
+    out = _diff(str(old), str(new))
+    assert out.returncode == 0
+    assert "::warning::bench regression a:" in out.stdout
+    assert "::warning::bench row disappeared: gone" in out.stdout
+    assert "regression b" not in out.stdout
+    assert "1 regression(s)" in out.stdout
+
+
+def test_improvement_reported_not_warned(tmp_path):
+    old = tmp_path / "OLD.json"
+    new = tmp_path / "NEW.json"
+    _write(old, _artifact([("a", 500.0)]))
+    _write(new, _artifact([("a", 100.0)]))
+    out = _diff(str(old), str(new))
+    assert out.returncode == 0
+    assert "bench improvement a" in out.stdout
+    assert "::warning::" not in out.stdout
+
+
+def test_missing_prior_is_first_run(tmp_path):
+    new = tmp_path / "NEW.json"
+    _write(new, _artifact([("a", 100.0)]))
+    out = _diff(str(tmp_path / "ABSENT.json"), str(new))
+    assert out.returncode == 0
+    assert "no prior" in out.stdout
+    assert "::warning::" not in out.stdout
+
+
+def test_empty_and_unparseable_prior_treated_as_no_prior(tmp_path):
+    new = tmp_path / "NEW.json"
+    _write(new, _artifact([("a", 100.0)]))
+    # empty trajectory: an artifact with zero usable rows (all errored)
+    empty = tmp_path / "EMPTY.json"
+    _write(empty, _artifact([("a", -1.0)]))
+    out = _diff(str(empty), str(new))
+    assert out.returncode == 0
+    assert "no usable rows" in out.stdout
+    assert "::warning::" not in out.stdout
+    # unparseable trajectory: truncated write from a killed CI box
+    broken = tmp_path / "BROKEN.json"
+    _write(broken, '{"results": [{"name": "a",')
+    out = _diff(str(broken), str(new))
+    assert out.returncode == 0
+    assert "could not parse prior" in out.stdout
+
+
+def test_seed_baseline_creates_trajectory(tmp_path):
+    new = tmp_path / "BENCH_MIGRATE.json"
+    _write(new, _artifact([("migrate/accuracy_retuned", 100.0)]))
+    old = tmp_path / "bench-baseline" / "BENCH_MIGRATE.json"
+    out = _diff(str(old), str(new), "--seed-baseline")
+    assert out.returncode == 0
+    assert "no prior" in out.stdout and "seeded baseline" in out.stdout
+    assert json.load(open(old)) == json.load(open(new))
+    # second run: the seeded baseline diffs cleanly against itself
+    out2 = _diff(str(old), str(new), "--seed-baseline")
+    assert out2.returncode == 0
+    assert "0 regression(s), 0 improvement(s)" in out2.stdout
+
+
+def test_seed_baseline_noop_without_flag(tmp_path):
+    new = tmp_path / "NEW.json"
+    _write(new, _artifact([("a", 100.0)]))
+    old = tmp_path / "OLD.json"
+    out = _diff(str(old), str(new))
+    assert out.returncode == 0
+    assert not old.exists()

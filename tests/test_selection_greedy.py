@@ -110,3 +110,89 @@ def test_exhaustive_at_least_as_good_as_greedy_mod3():
     err_ex = _error_of(ex.spec, stream, key)
     err_gr = _error_of(gr.spec, stream, key)
     assert err_ex <= err_gr * 1.35 + 0.02   # greedy close to exhaustive
+
+
+# --------------------------------------------------------------------------
+# Live-stats faithfulness: the online re-search equals the offline search
+# when the proxy sample is exact (streams/livestats.py contract)
+# --------------------------------------------------------------------------
+
+def _small_keyspace_endpoint(seed):
+    """Keyspace engineered so the endpoint's live state is lossless: pools
+    far under capacity (every group value admitted) and level tables so
+    sparse that no key pair collides in all rows -- the proxy sample from
+    the descent is then the exact compressed stream."""
+    from repro.core.hashing import KeySchema
+    from repro.serving.engine import SketchTopKEndpoint
+
+    rng = np.random.default_rng(seed)
+    n = 3000
+    src = rng.integers(0, 4, size=n).astype(np.uint32)
+    mid = ((src * 2 + rng.integers(0, 3, size=n)) % 8).astype(np.uint32)
+    tgt = (rng.zipf(1.6, size=n) % 12).astype(np.uint32)
+    uniq, inv = np.unique(np.stack([src, mid, tgt], axis=1), axis=0,
+                          return_inverse=True)
+    freqs = np.bincount(inv).astype(np.int64)
+    schema = KeySchema(domains=(4, 8, 16))
+    spec = sk.mod_sketch_spec(schema, [(0,), (1,), (2,)], (16, 16, 16), 5)
+    ep = SketchTopKEndpoint(spec, jax.random.PRNGKey(0))
+    ep.ingest(uniq, freqs)
+    return ep, schema, uniq, freqs
+
+
+@pytest.mark.parametrize("seed", [7, 11])
+def test_live_stats_proxy_sample_is_exact_on_small_keyspace(seed):
+    from repro.streams import collect_live_stats, exact_marginals
+
+    ep, schema, uniq, freqs = _small_keyspace_endpoint(seed)
+    stats = collect_live_stats(ep, k=len(uniq) + 32, min_threshold=1)
+    exact = {tuple(r): f for r, f in zip(uniq.tolist(), freqs.tolist())}
+    got = {tuple(r): f for r, f in
+           zip(stats.items.tolist(), stats.freqs.tolist())}
+    assert got == exact               # no phantom keys, no inflated counts
+    assert stats.total == int(freqs.sum())
+    assert abs(stats.coverage - 1.0) < 1e-9
+    # per-group marginal mass off the level tables == exact marginals
+    for j in range(schema.modularity):
+        per_row = exact_marginals(uniq, freqs, [j])  # O(v_j, *) per row
+        exact_m = {int(v): int(m) for v, m in
+                   zip(uniq[:, j].tolist(), per_row.tolist())}
+        live = {int(v): int(m) for v, m in
+                zip(stats.group_values[j][:, 0].tolist(),
+                    stats.group_mass[j].tolist())}
+        assert live == exact_m
+
+
+@pytest.mark.parametrize("seed", [7, 11])
+def test_live_propose_spec_matches_offline_greedy_and_exhaustive(seed):
+    """With an exact proxy sample, the online re-search IS the offline
+    search: propose_spec == greedy_config bitwise (partition + ranges),
+    and at a budget where greedy finds the optimum it also equals
+    exhaustive_config."""
+    from repro.streams import collect_live_stats, propose_spec
+
+    ep, schema, uniq, freqs = _small_keyspace_endpoint(seed)
+    stats = collect_live_stats(ep, k=len(uniq) + 32, min_threshold=1)
+    key = jax.random.PRNGKey(3)
+    for h in (64, 256):
+        live = propose_spec(stats, h, 4, key)
+        off = greedy_config(uniq, freqs, schema, h, 4, key)
+        assert live.spec.partition == off.spec.partition
+        assert live.spec.ranges == off.spec.ranges
+        assert live.spec.width == off.spec.width
+    ex = exhaustive_config(uniq, freqs, schema, 64, 4, key)
+    live64 = propose_spec(stats, 64, 4, key)
+    assert live64.spec.partition == ex.spec.partition
+    assert live64.spec.ranges == ex.spec.ranges
+
+
+def test_live_propose_spec_range_only_matches_recursive_ranges():
+    from repro.core.range_opt import recursive_ranges
+    from repro.streams import collect_live_stats, propose_spec
+
+    ep, schema, uniq, freqs = _small_keyspace_endpoint(7)
+    stats = collect_live_stats(ep, k=len(uniq) + 32, min_threshold=1)
+    part = ((0,), (1,), (2,))
+    live = propose_spec(stats, 256, 4, jax.random.PRNGKey(3), partition=part)
+    assert live.spec.partition == part
+    assert live.spec.ranges == recursive_ranges(uniq, freqs, part, 256.0)
