@@ -28,11 +28,11 @@ def main() -> None:
 
     from benchmarks import bounds_check, common, hierarchy_ingest_bench, \
         kernel_microbench, migrate_bench, paper_figs, roofline_report, \
-        sharded_topk_bench, window_bench
+        serve_bench, sharded_topk_bench, window_bench
     benches = (paper_figs.ALL + bounds_check.ALL + kernel_microbench.ALL
                + roofline_report.ALL + sharded_topk_bench.ALL
                + hierarchy_ingest_bench.ALL + window_bench.ALL
-               + migrate_bench.ALL)
+               + migrate_bench.ALL + serve_bench.ALL)
     print("name,us_per_call,derived")
     t_start = time.time()
     failures = []

@@ -1,0 +1,132 @@
+"""Async sketch-serving engine benchmarks -> BENCH_SERVE.json.
+
+Run via ``python -m benchmarks.run --only serve``:
+
+  * ``serve/mixed_*`` -- mixed-load throughput: one stream of ingest
+    blocks with a top-k query every few blocks, served four ways.
+    ``serialized`` is the pre-engine baseline (synchronous
+    SketchTopKEndpoint: every query sees every ingested item);
+    ``engine_stale0`` is the engine at ``max_staleness=0`` (same
+    freshness contract, so it pays a snapshot refresh per query);
+    ``engine_bounded`` allows a staleness budget so most queries reuse
+    the snapshot; ``engine_unbounded`` only refreshes on explicit sync.
+    The bounded/unbounded rows demonstrate the ingest/query overlap the
+    engine exists for: pipelined ingest keeps streaming while queries
+    answer from the snapshot, beating the serialized baseline
+    (``speedup_vs_serialized`` in the derived fields).
+  * ``serve/descent_*`` -- batched multi-request descent: Q concurrent
+    top-k requests served by one submit/flush (one packed P x C x Q
+    launch per level per round, core.hierarchy.batched_find_heavy_hitters)
+    vs Q serial ``topk`` calls.  Same answers bit-for-bit
+    (tests/test_serve_engine.py); the rows price the launch packing.
+
+CPU/interpret numbers: orchestration + jnp gather costs, not kernel
+speed (docs/benchmarks.md, "interpret-mode caveat").
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import sketch as sk
+from repro.serving.sketch_engine import SketchServeEngine, SketchTopKEndpoint
+from repro.streams import zipf_hh_workload
+
+_RANGES, _W = (32, 32), 4
+_BLOCK = 512
+_QUERY_EVERY = 4          # one top-k query per this many ingested blocks
+_TOPK = 16
+
+
+def _workload(seed: int = 0):
+    stream = zipf_hh_workload(n_src=1_000, n_tgt=2_000, n_edges=20_000,
+                              n_occurrences=200_000, seed=seed).stream
+    spec = sk.mod_sketch_spec(stream.schema, [(0,), (1,)], _RANGES, _W)
+    blocks = [(stream.items[s:s + _BLOCK], stream.freqs[s:s + _BLOCK])
+              for s in range(0, stream.items.shape[0], _BLOCK)]
+    return spec, blocks
+
+
+def _run_mixed(ingest, query, blocks) -> float:
+    """Wall time of the mixed load: ingest every block, query every
+    _QUERY_EVERY blocks; returns seconds."""
+    t0 = time.perf_counter()
+    for b, (items, freqs) in enumerate(blocks):
+        ingest(items, freqs)
+        if (b + 1) % _QUERY_EVERY == 0:
+            query(_TOPK)
+    return time.perf_counter() - t0
+
+
+def serve_mixed_load() -> None:
+    spec, blocks = _workload()
+    key = jax.random.PRNGKey(0)
+    n_queries = len(blocks) // _QUERY_EVERY
+    bound = sum(int(np.asarray(f).sum()) for _, f in blocks) // 4
+
+    def timed_mixed(build):
+        # run twice on fresh state, time the second: the first run compiles
+        # every (block, candidate-count) shape so no config inherits or
+        # pays compile costs depending on run order
+        for i in range(2):
+            ingest, query, drain = build()
+            t = _run_mixed(ingest, query, blocks)
+            drain()
+        return t
+
+    def serialized():
+        ep = SketchTopKEndpoint(spec, key)
+        return ep.ingest, ep.topk, lambda: None
+
+    def engine(staleness):
+        eng = SketchServeEngine(SketchTopKEndpoint(spec, key),
+                                max_staleness=staleness)
+        return eng.ingest, eng.topk, eng.drain
+
+    dt_serial = timed_mixed(serialized)
+    emit("serve/mixed_serialized", dt_serial * 1e6 / len(blocks),
+         f"blocks={len(blocks)};queries={n_queries};block={_BLOCK};"
+         f"k={_TOPK};speedup_vs_serialized=1.00")
+
+    for label, staleness in (("stale0", 0), ("bounded", bound),
+                             ("unbounded", None)):
+        dt = timed_mixed(lambda: engine(staleness))
+        emit(f"serve/mixed_engine_{label}", dt * 1e6 / len(blocks),
+             f"blocks={len(blocks)};queries={n_queries};"
+             f"max_staleness={staleness};"
+             f"speedup_vs_serialized={dt_serial / dt:.2f}")
+
+
+def serve_batched_descent() -> None:
+    spec, blocks = _workload(seed=3)
+    key = jax.random.PRNGKey(0)
+    ep = SketchTopKEndpoint(spec, key)
+    for items, freqs in blocks:
+        ep.ingest(items, freqs)
+    eng = SketchServeEngine(ep, max_staleness=None)
+    eng.sync()
+
+    for q in (1, 4, 16):
+        ks = [_TOPK + 2 * i for i in range(q)]  # distinct request shapes
+
+        def serial():
+            return [eng.topk(k) for k in ks]
+
+        def batched():
+            for k in ks:
+                eng.submit_topk(k)
+            return eng.flush()
+
+        serial(); batched()                     # warmup/compile
+        t0 = time.perf_counter(); serial(); dt_s = time.perf_counter() - t0
+        t0 = time.perf_counter(); batched(); dt_b = time.perf_counter() - t0
+        emit(f"serve/descent_serial_q{q}", dt_s * 1e6 / q,
+             f"q={q};k0={_TOPK};speedup=1.00")
+        emit(f"serve/descent_batched_q{q}", dt_b * 1e6 / q,
+             f"q={q};k0={_TOPK};speedup={dt_s / dt_b:.2f}")
+
+
+ALL = [serve_mixed_load, serve_batched_descent]

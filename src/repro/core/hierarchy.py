@@ -398,6 +398,57 @@ def update_conservative_jit(hspec: HierarchySpec, state: HierarchyState,
         for st, t in zip(state.states, tables)))
 
 
+# --------------------------------------------------------------------------
+# Two-phase ingest (the serving engine's double-buffered pipeline)
+# --------------------------------------------------------------------------
+#
+# update_jit fuses the hash cascade and the table fold into one program.
+# The async serving engine (serving/sketch_engine.SketchServeEngine) wants
+# them SPLIT: the cascade of block k+1 reads only the (never-donated) hash
+# params and the block, so it can be dispatched while block k's fold is
+# still executing against the donated table buffers -- the fold ping-pongs
+# the table buffers (donation rebinds them every call) while the cascade
+# runs ahead one block.  Splitting changes nothing numerically:
+# stage_indices computes exactly the indices update_jit computes, and
+# fold_indices applies exactly its add_at_indices -- the composition is
+# bit-identical to update_jit (tests/test_serve_engine.py enforces it).
+
+@functools.partial(jax.jit, static_argnums=0)
+def _stage_indices_jit(hspec: HierarchySpec, fine_params, items):
+    return hierarchy_indices(hspec, fine_params, items)
+
+
+def stage_indices(hspec: HierarchySpec, state: HierarchyState,
+                  items) -> Tuple[jax.Array, ...]:
+    """Pipeline stage A: the hash cascade alone (all levels' cell indices).
+
+    Depends only on the hash params and the block -- never on the tables --
+    so it can run while a previous block's fold is in flight."""
+    _require_shared_params(state, "hierarchy.stage_indices")
+    return _stage_indices_jit(hspec, state.states[-1].params, items)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _fold_indices_tables_jit(tables, idxs, freqs):
+    return tuple(sk.add_at_indices(t, idx, freqs)
+                 for t, idx in zip(tables, idxs))
+
+
+def fold_indices(state: HierarchyState, idxs: Tuple[jax.Array, ...],
+                 freqs) -> HierarchyState:
+    """Pipeline stage B: fold pre-computed level indices into the tables.
+
+    Table buffers are donated (same ping-pong as :func:`update_jit`);
+    callers rebind the state to the return value.  ``fold_indices(state,
+    stage_indices(hspec, state, items), freqs)`` is bit-identical to
+    ``update_jit(hspec, state, items, freqs)``."""
+    tables = _fold_indices_tables_jit(
+        tuple(st.table for st in state.states), idxs, freqs)
+    return HierarchyState(states=tuple(
+        sk.SketchState(params=st.params, table=t)
+        for st, t in zip(state.states, tables)))
+
+
 def sharded_hierarchy_build(
     hspec: HierarchySpec,
     state: HierarchyState,
@@ -590,3 +641,156 @@ def find_heavy_hitters(
 
     order = np.argsort(-est, kind="stable")
     return hspec.to_schema_order(prefixes[order]), est[order]
+
+
+# --------------------------------------------------------------------------
+# Batched multi-request descent (Q concurrent queries, one launch per level)
+# --------------------------------------------------------------------------
+
+def batched_candidate_estimates(
+    hspec: HierarchySpec,
+    state: HierarchyState,
+    level: int,
+    prefix_sets: Sequence[np.ndarray],   # Q arrays uint32[P_q, n_prefix_mods]
+    values: np.ndarray,                  # uint32[C, len(level group modules)]
+    *,
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
+    tile_h: int = 512,
+    max_batch: Optional[int] = None,
+) -> List[np.ndarray]:
+    """CM estimate grids for Q concurrent requests at one level: Q x [P_q, C].
+
+    All requests share the level's candidate set but carry their own
+    surviving prefix sets.  The prefix partials are hashed ONCE over the
+    concatenated prefixes, padded to a common P_max (pad prefix index 0 is
+    always a valid cell; the padded rows are sliced off), and the whole
+    [Q, P_max, C] request grid is evaluated in a single launch
+    (kernels/hier_query.hier_candidate_query_batched) -- Q concurrent
+    queries cost one ``pallas_call`` per level instead of Q.  Every
+    returned cell is computed lane-independently, so each request's grid
+    is bit-identical to its own :func:`candidate_estimates` call.
+
+    ``max_batch`` bounds the Q*P_max*C working set by chunking the request
+    axis (the per-request grids are already the unsplittable unit).
+    """
+    if not prefix_sets:
+        return []
+    counts = [int(np.asarray(p).shape[0]) for p in prefix_sets]
+    if min(counts) == 0:
+        raise ValueError("every request must have a non-empty prefix set "
+                         "(callers retire empty requests before batching)")
+    values = jnp.asarray(np.asarray(values, dtype=np.uint32))
+    cat = jnp.asarray(np.concatenate(
+        [np.asarray(p, dtype=np.uint32) for p in prefix_sets], axis=0))
+    pp_all, cp = candidate_partials(hspec, state, level, cat, values)
+    nq, p_max, c = len(counts), max(counts), int(cp.shape[1])
+
+    table = state.states[level].table
+    from repro.kernels.hier_query import (
+        hier_candidate_query_batched,
+        hier_candidate_query_batched_ref,
+    )
+    if use_kernel and table.dtype == jnp.int32:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        def one(pp3):
+            return hier_candidate_query_batched(table, pp3, cp,
+                                                tile_h=tile_h,
+                                                interpret=interpret)
+    else:
+        def one(pp3):
+            return hier_candidate_query_batched_ref(table, pp3, cp)
+
+    # per-request column blocks, padded to the common P_max
+    blocks, off = [], 0
+    for n in counts:
+        blk = pp_all[:, off : off + n]
+        if n < p_max:
+            blk = jnp.pad(blk, ((0, 0), (0, p_max - n)))
+        blocks.append(blk)
+        off += n
+    pp3 = jnp.stack(blocks, axis=1)                  # [w, Q, P_max]
+
+    if max_batch is None or nq * p_max * c <= max_batch:
+        grids = np.asarray(one(pp3))
+    else:
+        q_chunk = max(1, max_batch // max(p_max * c, 1))
+        outs = []
+        for s in range(0, nq, q_chunk):
+            qc = pp3[:, s : s + q_chunk]
+            if qc.shape[1] < q_chunk:
+                # pad to the fixed chunk so one compiled kernel serves
+                # every chunk (pad prefix 0 is a valid cell; sliced off)
+                qc = jnp.pad(qc, ((0, 0), (0, q_chunk - qc.shape[1]),
+                                  (0, 0)))
+            outs.append(np.asarray(one(qc)))
+        grids = np.concatenate(outs, axis=0)[:nq]
+    return [grids[i, : counts[i], :] for i in range(nq)]
+
+
+def batched_find_heavy_hitters(
+    hspec: HierarchySpec,
+    state: HierarchyState,
+    thresholds: Sequence[float],
+    candidates: Sequence[np.ndarray],
+    *,
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
+    max_batch: int = 1 << 16,
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Q concurrent heavy-hitter descents sharing one set of launches.
+
+    Request q receives exactly ``find_heavy_hitters(..., thresholds[q],
+    candidates)`` -- bit-identical, enforced by tests/test_serve_engine.py
+    -- but the per-level candidate grids of ALL still-active requests are
+    evaluated together (:func:`batched_candidate_estimates`), so the
+    device sees one P x C x Q launch per level instead of Q separate
+    P x C launches.  Requests prune independently; a request whose prefix
+    set empties retires early with the empty result, same as the serial
+    descent.
+    """
+    if len(candidates) != hspec.n_levels:
+        raise ValueError(
+            f"need one candidate set per level ({hspec.n_levels}), "
+            f"got {len(candidates)}")
+    thrs = [int(t) for t in thresholds]
+    nq = len(thrs)
+    n_mods = len(level_modules(hspec.base, hspec.n_levels - 1))
+    empty = (np.zeros((0, n_mods), np.uint32), np.zeros((0,), np.int64))
+
+    prefixes = [np.zeros((1, 0), dtype=np.uint32) for _ in range(nq)]
+    est = [np.zeros((1,), dtype=np.int64) for _ in range(nq)]
+    done: List[Optional[Tuple[np.ndarray, np.ndarray]]] = [None] * nq
+    for lvl in range(hspec.n_levels):
+        active = [q for q in range(nq) if done[q] is None]
+        if not active:
+            break
+        cand = np.asarray(candidates[lvl], dtype=np.uint32)
+        if cand.ndim != 2 or cand.shape[1] != len(hspec.base.partition[lvl]):
+            raise ValueError(
+                f"candidates[{lvl}] must be [C, {len(hspec.base.partition[lvl])}]")
+        for q in active:
+            if prefixes[q].shape[0] == 0 or cand.shape[0] == 0:
+                done[q] = empty
+        active = [q for q in active if done[q] is None]
+        if not active:
+            break
+        grids = batched_candidate_estimates(
+            hspec, state, lvl, [prefixes[q] for q in active], cand,
+            use_kernel=use_kernel, interpret=interpret, max_batch=max_batch)
+        for q, grid in zip(active, grids):
+            grid = grid.astype(np.int64)
+            keep_p, keep_c = np.nonzero(grid >= thrs[q])
+            prefixes[q] = np.concatenate(
+                [prefixes[q][keep_p], cand[keep_c]], axis=1)
+            est[q] = grid[keep_p, keep_c]
+
+    out: List[Tuple[np.ndarray, np.ndarray]] = []
+    for q in range(nq):
+        if done[q] is not None:
+            out.append(done[q])
+            continue
+        order = np.argsort(-est[q], kind="stable")
+        out.append((hspec.to_schema_order(prefixes[q][order]), est[q][order]))
+    return out

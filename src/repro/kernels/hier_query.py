@@ -107,3 +107,43 @@ def hier_candidate_query_ref(table: jax.Array, pp: jax.Array,
            + cp.astype(jnp.int32)[:, None, :]).reshape(w, -1)
     vals = jnp.take_along_axis(table, idx, axis=1)
     return jnp.min(vals, axis=0).reshape(pp.shape[1], cp.shape[1])
+
+
+# --------------------------------------------------------------------------
+# Request axis: Q concurrent queries in the one launch
+# --------------------------------------------------------------------------
+#
+# The grid evaluates P*C independent lanes per (row, tile); nothing ties a
+# lane to "one query", so Q concurrent requests' prefix sets ride the lane
+# axis: [w, Q, P] prefix partials flatten to [w, Q*P], the SAME pallas_call
+# runs once with Q*P*C lanes, and the output folds back to [Q, P, C].
+# Each lane's estimate is computed independently (one-hot gather + min over
+# rows), so every request's [P, C] slab is bit-identical to its own
+# single-request launch -- batching Q queries costs one launch per level
+# instead of Q (the sketch serving engine's batched descent).
+
+@functools.partial(jax.jit, static_argnames=("tile_h", "interpret"))
+def hier_candidate_query_batched(
+    table: jax.Array,   # int32[w, h]
+    pp: jax.Array,      # uint32[w, Q, P] per-request prefix partials
+    cp: jax.Array,      # uint32[w, C] child partials (shared by all requests)
+    *,
+    tile_h: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Count-Min estimates for Q requests' (prefix, candidate) grids:
+    int32[Q, P, C], one ``pallas_call`` total."""
+    w, q, p = pp.shape
+    flat = hier_candidate_query(table, pp.reshape(w, q * p), cp,
+                                tile_h=tile_h, interpret=interpret)
+    return flat.reshape(q, p, cp.shape[1])
+
+
+@jax.jit
+def hier_candidate_query_batched_ref(table: jax.Array, pp: jax.Array,
+                                     cp: jax.Array) -> jax.Array:
+    """Request-axis jnp oracle: [w, Q, P] partials -> [Q, P, C] estimates
+    in the table's dtype (the non-int32 / non-kernel batched path)."""
+    w, q, p = pp.shape
+    flat = hier_candidate_query_ref(table, pp.reshape(w, q * p), cp)
+    return flat.reshape(q, p, cp.shape[1])

@@ -26,8 +26,10 @@ def run_sketch_autotune(args) -> None:
     from repro.core import sketch as sk
     from repro.core.hashing import KeySchema
     from repro.serving.autotune import AutoTuner
-    from repro.serving.engine import SketchTopKEndpoint
-    from repro.streams import average_relative_error, skew_flip_batches
+    from repro.serving.sketch_engine import (SketchServeEngine,
+                                             SketchTopKEndpoint)
+    from repro.streams import skew_flip_batches
+    from repro.streams.stats import topk_point_are
 
     domains = (args.domain, args.domain)
     schema = KeySchema(domains=domains)
@@ -43,14 +45,21 @@ def run_sketch_autotune(args) -> None:
                       retune_every=args.retune_every, warmup=args.warmup,
                       min_improvement=args.min_improvement, sample_k=256,
                       min_threshold=1, search=args.search)
+    # the tuner plugs into the serving engine at exactly one place: it
+    # ticks on every sync() (snapshot boundary), so retune decisions --
+    # and the migrations they open -- happen between pipelined blocks,
+    # never against half-folded tables
+    engine = SketchServeEngine(live, max_staleness=None, tuner=tuner)
 
     batches = list(skew_flip_batches(domains, args.batches,
                                      args.rows_per_batch, seed=args.seed))
     window_start = 0          # first batch the CURRENT tables have seen
     t0 = time.perf_counter()
     for b, batch in enumerate(batches):
-        live.ingest(batch.items, batch.freqs)
-        d = tuner.step()
+        n_prev = len(tuner.decisions)
+        engine.ingest(batch.items, batch.freqs)
+        engine.sync()
+        d = tuner.decisions[-1] if len(tuner.decisions) > n_prev else None
         if d is not None:
             print(f"[batch {b:3d} total={d.at_total:,}] {d.reason}: "
                   f"sigma {d.sigma_current:.2f} -> {d.sigma_proposed:.2f}"
@@ -78,9 +87,8 @@ def run_sketch_autotune(args) -> None:
     true = np.array([v for _, v in top], dtype=np.int64)
 
     def are(ep):
-        est = np.array([int(x) for x in np.asarray(
-            sk.query(ep.hspec.levels[-1], ep.state.states[-1], q))])
-        return average_relative_error(true, est)
+        # twin scoring shared with the DStream harness (streams/stats.py)
+        return topk_point_are(ep.hspec, ep.state, q, true)
 
     print(f"\n{args.batches} batches in {dt:.2f}s; "
           f"migrations={sum(d.migrated for d in tuner.decisions)} "
@@ -94,8 +102,8 @@ def run_sketch_autotune(args) -> None:
 def run_model_serving(args) -> None:
     from repro.configs import get_config, get_reduced
     from repro.models import transformer as tfm
-    from repro.serving.engine import (Request, ServeConfig, ServeEngine,
-                                      SlotScheduler)
+    from repro.serving.model_engine import (Request, ServeConfig, ServeEngine,
+                                            SlotScheduler)
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
     params = tfm.init_params(cfg, jax.random.PRNGKey(args.seed))

@@ -1,433 +1,34 @@
-"""Batched serving engine: prefill + decode with a static KV cache.
+"""Compatibility shim: the serving engine split into model + sketch halves.
 
-The lowered unit is ``serve_step`` = one new token for every sequence in the
-batch against a ``seq_len`` cache -- exactly the assigned ``decode_*`` /
-``long_*`` dry-run cells.  The engine adds request batching (uniform
-position; left-padded prompts), greedy/temperature sampling, and a simple
-slot scheduler for continuous batching at the granularity of whole steps.
+``repro.serving.engine`` used to hold both the LLM serving engine and the
+streaming sketch endpoint in one module.  They now live in
+
+  * serving/model_engine.py -- ServeConfig, ServeEngine, Request,
+    SlotScheduler (token generation, KV-cache decode slots);
+  * serving/sketch_engine.py -- SketchTopKEndpoint plus the async
+    SketchServeEngine (pipelined ingest, snapshot queries, batched
+    descent);
+
+behind the shared submit/flush protocol of serving/protocol.py.  This
+module re-exports every pre-split name verbatim so existing imports keep
+working; new code should import from the split modules directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from repro.serving.model_engine import (
+    PyTree,
+    Request,
+    ServeConfig,
+    ServeEngine,
+    SlotScheduler,
+)
+from repro.serving.sketch_engine import SketchTopKEndpoint
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import ModelConfig
-from repro.models import transformer as tfm
-
-PyTree = Any
-
-
-@dataclasses.dataclass
-class ServeConfig:
-    max_len: int = 2048
-    temperature: float = 0.0     # 0 = greedy
-    eos_id: int = -1             # -1 = never stop early
-
-
-class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params: PyTree, scfg: ServeConfig,
-                 seed: int = 0):
-        self.cfg = cfg
-        self.params = params
-        self.scfg = scfg
-        self.key = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(
-            lambda p, t, e: tfm.prefill(cfg, p, t, embeds=e,
-                                        max_len=scfg.max_len))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: tfm.decode_step(cfg, p, c, t, pos))
-
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        if self.scfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(
-            sub, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
-
-    def generate(
-        self,
-        prompts: np.ndarray,                # int32[B, S] (uniform length)
-        max_new_tokens: int,
-        embeds: Optional[np.ndarray] = None,
-    ) -> np.ndarray:
-        cfg = self.cfg
-        prompts = jnp.asarray(prompts, jnp.int32)
-        b, s = prompts.shape
-        n_prefix = 0
-        if cfg.frontend and not cfg.n_enc_layers:
-            n_prefix = cfg.frontend_len
-        if embeds is not None:
-            embeds = jnp.asarray(embeds, cfg.activation_dtype)
-        logits, cache = self._prefill(self.params, prompts, embeds)
-        out = [self._sample(logits)[:, None]]
-        pos = n_prefix + s
-        for _ in range(max_new_tokens - 1):
-            lg, cache = self._decode(self.params, cache, out[-1], jnp.int32(pos))
-            out.append(self._sample(lg[:, 0, :])[:, None])
-            pos += 1
-        return np.asarray(jnp.concatenate(out, axis=1))
-
-
-# --------------------------------------------------------------------------
-# continuous batching (step-granular slot scheduler)
-# --------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
-    max_new: int
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-class SlotScheduler:
-    """Admit requests into fixed decode slots; refill as sequences finish.
-
-    Real continuous batching interleaves per-token; at the benchmark
-    granularity used here, slots turn over between generate() calls of
-    uniform-length cohorts, which preserves the serving-throughput shape
-    while keeping the lowered step static.
-    """
-
-    def __init__(self, engine: ServeEngine, n_slots: int):
-        self.engine = engine
-        self.n_slots = n_slots
-        self.queue: List[Request] = []
-        self.completed: List[Request] = []
-
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def run(self) -> List[Request]:
-        while self.queue:
-            cohort = self.queue[: self.n_slots]
-            self.queue = self.queue[self.n_slots:]
-            s = min(len(r.prompt) for r in cohort)
-            prompts = np.stack([r.prompt[:s] for r in cohort])
-            max_new = max(r.max_new for r in cohort)
-            toks = self.engine.generate(prompts, max_new)
-            for r, row in zip(cohort, toks):
-                r.out = row[: r.max_new].tolist()
-                r.done = True
-                self.completed.append(r)
-        return self.completed
-
-
-# --------------------------------------------------------------------------
-# streaming top-k endpoint (hierarchical heavy-hitter sketch)
-# --------------------------------------------------------------------------
-
-class SketchTopKEndpoint:
-    """Serving endpoint for streaming heavy-hitter / top-k queries.
-
-    Ingests weighted key blocks (telemetry: routed-token pairs, request
-    n-grams, edge events) into a hierarchical composite-hash sketch
-    (core/hierarchy.py) and answers
-
-      * ``heavy_hitters(threshold)`` -- every key estimated >= threshold,
-      * ``topk(k)`` -- the k keys with the largest estimates,
-
-    without storing the stream.  Memory is the hierarchy's tables plus
-    bounded per-group candidate pools.  Admission is a weighted
-    space-saving summary per group (core/summary.py): at capacity m, a new
-    value evicts the lightest entry instead of being dropped, so any group
-    value carrying more than total/m of the stream's weight is in the pool
-    no matter how late it first arrives; the no-false-negative guarantee
-    of the descent is conditional on that W/m admission bound.
-
-    ``mode="conservative"`` applies the Estan-Varghese conservative update
-    per level: strictly tighter estimates, but the tables are no longer
-    linear in the stream, so such an endpoint refuses ``merge_from`` (both
-    directions) and must stay single-shard -- conservative tables are
-    excluded from the cell-wise merge and psum paths of
-    core/distributed.py.
-
-    Every ingest path hashes each item ONCE and derives all level indices
-    by the mixed-radix cascade (core/hierarchy.py's shared per-group hash
-    family).  ``use_update_kernel=True`` additionally folds each block into
-    all level tables with the fused single-launch Pallas kernel
-    (kernels/ops.KernelHierarchy); linear mode only -- a conservative
-    endpoint silently keeps the jnp per-level sequential folds, which
-    already share the cascade's one hash pass.
-
-    Linear endpoints shard naturally: run one per ingest worker and fold
-    with ``merge_from`` at query time (tables cell-wise, exact by
-    linearity; candidate summaries via the mergeable-summaries rule).
-
-    Hot spec migration (serving/migration.py): ``begin_migration`` opens a
-    double-write window onto a fresh successor endpoint built on a
-    re-tuned spec; queries keep serving from the old tables until the
-    successor has absorbed ``warmup`` stream mass, then the endpoint cuts
-    over to the successor's state wholesale and frees the old tables.
-    Linear mode only; ``merge_from``/``to_sharded`` are refused mid-window
-    (the successor would not see the same state change).
-    """
-
-    def __init__(self, base_spec, key, *, max_candidates_per_group: int = 1 << 16,
-                 use_kernel: bool = False, use_update_kernel: bool = False,
-                 dtype=jnp.int32, mode: str = "linear"):
-        from repro.core import hierarchy as hh
-        from repro.core.summary import SpaceSaving
-
-        if mode not in ("linear", "conservative"):
-            raise ValueError(f"mode must be 'linear' or 'conservative', got {mode!r}")
-        self._hh = hh
-        self._kh = None
-        self._migration = None
-        self._use_update_kernel = bool(use_update_kernel)
-        self.hspec = hh.HierarchySpec.from_spec(base_spec)
-        self.state = hh.init_hierarchy(self.hspec, key, dtype=dtype)
-        self.max_candidates = int(max_candidates_per_group)
-        self.use_kernel = use_kernel
-        self.mode = mode
-        self.total = 0
-        self._pools: List[SpaceSaving] = [
-            SpaceSaving(self.max_candidates, len(g))
-            for g in base_spec.partition
-        ]
-        if use_update_kernel and mode == "linear":
-            from repro.kernels.ops import KernelHierarchy
-
-            # the endpoint's state moves into the kernel wrapper's
-            # concatenated padded table; ``state`` stays visible as a
-            # lazily sliced view (see the property below)
-            self._kh = KernelHierarchy.from_state(self.hspec, self._state)
-            self._state = None
-
-    @property
-    def state(self):
-        """The hierarchy state (assembled lazily on the fused-kernel path)."""
-        if self._kh is not None:
-            return self._kh.state()
-        return self._state
-
-    @state.setter
-    def state(self, value) -> None:
-        if getattr(self, "_kh", None) is not None:
-            self._kh.load_state(value)
-        else:
-            self._state = value
-
-    def _ingest_active(self, items: np.ndarray, freqs: np.ndarray) -> None:
-        """Fold one normalized block into the ACTIVE (serving) tables."""
-        if self.mode == "conservative":
-            from repro.core.sketch import check_conservative_freqs
-            check_conservative_freqs(freqs, self.state.states[0].table.dtype)
-        if self._kh is not None:
-            # reject kernel-unrepresentable weights BEFORE touching pools
-            # or totals, so a failed ingest leaves the endpoint unchanged
-            from repro.kernels.ops import check_linear_kernel_freqs
-            check_linear_kernel_freqs(freqs, self._kh.table.dtype)
-        self.total += int(freqs.sum())
-        for j, g in enumerate(self.hspec.base.partition):
-            self._pools[j].offer(items[:, list(g)], freqs)
-        if self._kh is not None:
-            # fused single-launch path: KernelHierarchy pads blocks to its
-            # own fixed block_b (zero-frequency pad rows are no-ops)
-            self._kh.update(items, freqs)
-            return
-        # pad blocks to the next power of two so the jitted multi-level
-        # update compiles O(log B) variants, not one per block length
-        # (zero-frequency pad items are no-ops and stay out of the pools)
-        from repro.core.distributed import pad_block_pow2
-        items, freqs, _ = pad_block_pow2(items, freqs, 1)
-        fold = (self._hh.update_conservative_jit
-                if self.mode == "conservative" else self._hh.update_jit)
-        self.state = fold(self.hspec, self.state, jnp.asarray(items),
-                          jnp.asarray(freqs))
-
-    def ingest(self, items: np.ndarray,
-               freqs: Optional[np.ndarray] = None) -> None:
-        items = np.asarray(items, dtype=np.uint32)
-        if items.shape[0] == 0:
-            return
-        if freqs is None:
-            freqs = np.ones(items.shape[0], dtype=np.int64)
-        freqs = np.asarray(freqs)
-        self._ingest_active(items, freqs)
-        if self._migration is not None:
-            # double-write window: the successor sees every block verbatim
-            # (unpadded -- it pads its own blocks exactly like a fresh
-            # endpoint would, which is what keeps cutover bit-identical
-            # to a fresh build on the new spec)
-            self._migration.offer(items, freqs)
-            if self._migration.ready:
-                self._cutover()
-
-    def candidates(self) -> List[np.ndarray]:
-        """Per-group candidate value arrays from the space-saving pools."""
-        return [p.values() for p in self._pools]
-
-    # -- hot spec migration (serving/migration.py) --------------------------
-
-    @property
-    def migrating(self) -> bool:
-        return self._migration is not None
-
-    @property
-    def migration_progress(self) -> float:
-        """Warmup progress in [0, 1]; 1.0 when no migration is in flight."""
-        return 1.0 if self._migration is None else self._migration.progress
-
-    def begin_migration(self, new_spec, key, *, warmup: int) -> None:
-        """Open a double-write window onto a fresh endpoint on ``new_spec``.
-
-        From the next ``ingest`` on, every block folds into BOTH the
-        active tables and a successor endpoint freshly built from
-        ``new_spec``/``key`` (same pool capacity, table dtype, and kernel
-        settings as this endpoint).  Queries keep answering from the
-        active tables until the successor has absorbed ``warmup`` stream
-        mass (sum of ingested frequencies); the ingest that crosses the
-        threshold cuts over: the successor's state becomes this
-        endpoint's state wholesale and the old tables are freed.
-
-        Linear mode only -- conservative tables are excluded from every
-        migration consumer (auto-tuning, re-meshing) and refused here via
-        the same guard as the sharded surfaces.  One migration at a time.
-        """
-        from repro.core.distributed import require_linear
-        from repro.serving.migration import SpecMigration
-
-        require_linear(self.mode, "SketchTopKEndpoint.begin_migration")
-        if self._migration is not None:
-            raise ValueError(
-                "a spec migration is already in flight "
-                f"({self._migration.progress:.0%} of warmup); one at a time")
-        incoming = SketchTopKEndpoint(
-            new_spec, key,
-            max_candidates_per_group=self.max_candidates,
-            use_kernel=self.use_kernel,
-            use_update_kernel=self._use_update_kernel,
-            dtype=self.state.states[0].table.dtype, mode="linear")
-        self._migration = SpecMigration(incoming, warmup)
-
-    def _cutover(self) -> None:
-        """Adopt the successor's state wholesale; free the old tables.
-
-        After this, the endpoint is bit-identical to a fresh endpoint
-        built on the new spec (same key) and fed exactly the blocks since
-        ``begin_migration`` -- the successor IS that endpoint.  ``total``
-        restarts at the post-warmup-start mass: estimates and totals
-        describe the same (new) stream window, which is what the top-k
-        descent's threshold scaling assumes.
-        """
-        inc = self._migration.incoming
-        self._migration = None
-        self.hspec = inc.hspec
-        self._kh = inc._kh
-        self._state = inc._state
-        self._pools = inc._pools
-        self.total = inc.total
-        # old tables/pools: last references dropped above -> freed
-
-    def heavy_hitters(self, threshold: int,
-                      candidates: Optional[List[np.ndarray]] = None,
-                      ) -> Tuple[np.ndarray, np.ndarray]:
-        if candidates is None:
-            candidates = self.candidates()
-        return self._hh.find_heavy_hitters(
-            self.hspec, self.state, threshold, candidates,
-            use_kernel=self.use_kernel)
-
-    def topk(self, k: int,
-             min_threshold: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
-        """Top-k by estimate: geometric threshold descent until k found.
-
-        See :func:`repro.serving.sharded_topk.threshold_descent_topk` (the
-        descent is shared with the sharded service) for the
-        ``min_threshold`` semantics.  Candidates are hoisted: the pools
-        don't change mid-descent.
-        """
-        from repro.serving.sharded_topk import threshold_descent_topk
-
-        return threshold_descent_topk(
-            self.heavy_hitters, self.candidates(), k, total=self.total,
-            n_modules=self.hspec.base.schema.modularity,
-            min_threshold=min_threshold)
-
-    def to_sharded(self, mesh, *, data_axes=None,
-                   sync_every: Optional[int] = 1,
-                   ) -> "object":
-        """Promote this single-shard endpoint to a ShardedTopKService.
-
-        Carries over the hierarchy tables, hash params, candidate pools,
-        and stream total; subsequent ingest runs sharded over the mesh.
-        Linear endpoints only: a conservative endpoint's tables are not
-        linear in the stream and must never enter the psum sync path, so
-        promotion is refused (same contract as merge_from).
-        """
-        from repro.core.sketch import SketchState
-        from repro.core.summary import SpaceSaving
-        from repro.serving.migration import require_not_migrating
-        from repro.serving.sharded_topk import ShardedTopKService
-
-        require_not_migrating(self._migration,
-                              "SketchTopKEndpoint.to_sharded")
-        if self.mode != "linear":
-            raise ValueError(
-                "to_sharded is only defined for linear endpoints: "
-                "conservative tables cannot be psum-merged, so a "
-                "conservative endpoint must stay single-shard")
-        svc = ShardedTopKService(
-            self.hspec.base, jax.random.PRNGKey(0), mesh,
-            data_axes=data_axes,
-            max_candidates_per_group=self.max_candidates,
-            sync_every=sync_every, use_kernel=self.use_kernel,
-            dtype=self.state.states[0].table.dtype)
-        # the service's freshly drawn params are discarded: the promoted
-        # state keeps this endpoint's params so existing tables stay valid.
-        # Tables are COPIED, not aliased: the endpoint's ingest path
-        # donates its table buffers (hierarchy.update_jit), so a later
-        # ep.ingest() would delete buffers the service still reads.
-        # Params are never donated, so sharing them is safe.
-        state = self.state
-        svc.merged = self._hh.HierarchyState(states=tuple(
-            SketchState(params=st.params, table=jnp.array(st.table))
-            for st in state.states))
-        svc.total = self.total
-        svc._shard_pools[0] = [SpaceSaving.fold([p]) for p in self._pools]
-        svc._global_pools = [SpaceSaving.fold([p]) for p in self._pools]
-        return svc
-
-    def merge_from(self, other: "SketchTopKEndpoint") -> None:
-        """Fold another endpoint's sketch + pools in (cross-shard merge).
-
-        Only defined for linear endpoints: conservative tables are not
-        linear in the stream, so a cell-wise sum of two conservatively
-        built hierarchies is not the hierarchy of the union stream --
-        conservative endpoints are single-shard by construction and
-        rejected here (both directions).
-
-        Shards must share the base spec and hash parameters (same spec +
-        PRNG key): cell-wise sums of tables hashed with different params --
-        or with the same params but permuted partition axes -- are garbage,
-        so mismatches are rejected rather than silently accepted.
-        """
-        from repro.serving.migration import require_not_migrating
-
-        require_not_migrating(self._migration,
-                              "SketchTopKEndpoint.merge_from")
-        require_not_migrating(other._migration,
-                              "SketchTopKEndpoint.merge_from (source side)")
-        if self.mode != "linear" or other.mode != "linear":
-            raise ValueError(
-                "merge_from is only defined for linear endpoints: "
-                "conservative tables cannot be merged cell-wise")
-        if self.hspec.base != other.hspec.base:
-            raise ValueError(
-                "merge_from requires identical base specs on both endpoints")
-        for sa, sb in zip(self.state.states, other.state.states):
-            if not (np.array_equal(np.asarray(sa.params.q), np.asarray(sb.params.q))
-                    and np.array_equal(np.asarray(sa.params.r), np.asarray(sb.params.r))):
-                raise ValueError(
-                    "merge_from requires identical hash params on both "
-                    "endpoints (build them from the same spec and key)")
-        self.state = self._hh.merge(self.state, other.state)
-        self.total += other.total
-        for mine, theirs in zip(self._pools, other._pools):
-            mine.merge_from(theirs)
+__all__ = [
+    "PyTree",
+    "Request",
+    "ServeConfig",
+    "ServeEngine",
+    "SlotScheduler",
+    "SketchTopKEndpoint",
+]

@@ -3,8 +3,9 @@
 A serving endpoint cannot atomically swap to a re-tuned SketchSpec: the
 new spec's tables start empty, so cutting over immediately would answer
 queries from a sketch that has seen nothing.  The migration protocol both
-serving surfaces (serving/engine.SketchTopKEndpoint,
-serving/sharded_topk.ShardedTopKService) implement on top of this holder:
+serving surfaces (serving/sketch_engine.SketchTopKEndpoint,
+serving/sharded_topk.ShardedTopKService) implement by mixing in
+:class:`MigratingSurface` on top of this holder:
 
   1. ``begin_migration(new_spec, key, warmup=W)`` builds a FRESH successor
      service on the new spec (empty tables, empty pools, total = 0);
@@ -44,6 +45,85 @@ from __future__ import annotations
 from typing import Optional
 
 import numpy as np
+
+
+class MigratingSurface:
+    """Mixin: the migration scaffolding shared by every serving surface.
+
+    SketchTopKEndpoint and ShardedTopKService used to carry identical
+    copies of the migration plumbing (the ``migrating`` /
+    ``migration_progress`` properties, the one-at-a-time guard, the
+    offer -> ready -> cutover ingest tail); this mixin is that plumbing,
+    written once.  A surface contributes exactly two hooks:
+
+      ``_build_successor(new_spec, key)``  a fresh, EMPTY sibling service
+          on the new spec, mirroring this surface's own configuration
+          (pool capacity, dtype, kernel settings, mesh, ...);
+      ``_adopt(successor)``  copy the successor's state fields over
+          wholesale at cutover (the per-surface field list).
+
+    and calls ``_migration_tick(raw_items, raw_freqs)`` at the end of its
+    ingest with the UNPADDED block -- the successor pads/splits its own
+    blocks exactly like a fresh service would, which is what keeps
+    cutover bit-identical to a fresh build on the new spec.
+    """
+
+    _migration: Optional["SpecMigration"] = None
+    mode: str = "linear"
+
+    @property
+    def migrating(self) -> bool:
+        return self._migration is not None
+
+    @property
+    def migration_progress(self) -> float:
+        """Warmup progress in [0, 1]; 1.0 when no migration is in flight."""
+        return 1.0 if self._migration is None else self._migration.progress
+
+    def begin_migration(self, new_spec, key, *, warmup: int) -> None:
+        """Open a double-write window onto a fresh service on ``new_spec``.
+
+        From the next ingest on, every block folds into BOTH the active
+        tables and a successor built by ``_build_successor`` (same pool
+        capacity, table dtype, kernel/mesh settings as this surface).
+        Queries keep answering from the active tables until the successor
+        has absorbed ``warmup`` stream mass (sum of ingested
+        frequencies); the ingest that crosses the threshold cuts over:
+        the successor's state becomes this surface's state wholesale and
+        the old tables are freed.
+
+        Linear mode only -- conservative tables are excluded from every
+        migration consumer (auto-tuning, re-meshing) and refused here via
+        the same guard as the sharded surfaces.  One migration at a time.
+        """
+        from repro.core.distributed import require_linear
+
+        require_linear(self.mode, f"{type(self).__name__}.begin_migration")
+        if self._migration is not None:
+            raise ValueError(
+                "a spec migration is already in flight "
+                f"({self._migration.progress:.0%} of warmup); one at a time")
+        self._migration = SpecMigration(
+            self._build_successor(new_spec, key), warmup)
+
+    def _migration_tick(self, raw_items: np.ndarray,
+                        raw_freqs: Optional[np.ndarray]) -> None:
+        """Double-write one ingested block; cut over when warmup is done."""
+        if self._migration is None:
+            return
+        self._migration.offer(raw_items, raw_freqs)
+        if self._migration.ready:
+            inc = self._migration.incoming
+            self._migration = None
+            self._adopt(inc)
+
+    # -- per-surface hooks --------------------------------------------------
+
+    def _build_successor(self, new_spec, key):
+        raise NotImplementedError
+
+    def _adopt(self, successor) -> None:
+        raise NotImplementedError
 
 
 class SpecMigration:

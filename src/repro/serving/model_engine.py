@@ -1,0 +1,128 @@
+"""Batched model-serving engine: prefill + decode with a static KV cache.
+
+The lowered unit is ``serve_step`` = one new token for every sequence in the
+batch against a ``seq_len`` cache -- exactly the assigned ``decode_*`` /
+``long_*`` dry-run cells.  The engine adds request batching (uniform
+position; left-padded prompts), greedy/temperature sampling, and a simple
+slot scheduler for continuous batching at the granularity of whole steps.
+
+This module is the model half of the serving stack; the sketch half
+(SketchTopKEndpoint, SketchServeEngine) lives in serving/sketch_engine.py.
+Both sit behind the same submit/flush engine protocol
+(serving/protocol.py); ``repro.serving.engine`` re-exports everything for
+callers that predate the split.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 2048
+    temperature: float = 0.0     # 0 = greedy
+    eos_id: int = -1             # -1 = never stop early
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: PyTree, scfg: ServeConfig,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, t, e: tfm.prefill(cfg, p, t, embeds=e,
+                                        max_len=scfg.max_len))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: tfm.decode_step(cfg, p, c, t, pos))
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(
+        self,
+        prompts: np.ndarray,                # int32[B, S] (uniform length)
+        max_new_tokens: int,
+        embeds: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        cfg = self.cfg
+        prompts = jnp.asarray(prompts, jnp.int32)
+        b, s = prompts.shape
+        n_prefix = 0
+        if cfg.frontend and not cfg.n_enc_layers:
+            n_prefix = cfg.frontend_len
+        if embeds is not None:
+            embeds = jnp.asarray(embeds, cfg.activation_dtype)
+        logits, cache = self._prefill(self.params, prompts, embeds)
+        out = [self._sample(logits)[:, None]]
+        pos = n_prefix + s
+        for _ in range(max_new_tokens - 1):
+            lg, cache = self._decode(self.params, cache, out[-1], jnp.int32(pos))
+            out.append(self._sample(lg[:, 0, :])[:, None])
+            pos += 1
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+
+# --------------------------------------------------------------------------
+# continuous batching (step-granular slot scheduler)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class SlotScheduler:
+    """Admit requests into fixed decode slots; refill as sequences finish.
+
+    Real continuous batching interleaves per-token; at the benchmark
+    granularity used here, slots turn over between generate() calls of
+    uniform-length cohorts, which preserves the serving-throughput shape
+    while keeping the lowered step static.
+    """
+
+    def __init__(self, engine: ServeEngine, n_slots: int):
+        self.engine = engine
+        self.n_slots = n_slots
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> List[Request]:
+        while self.queue:
+            cohort = self.queue[: self.n_slots]
+            self.queue = self.queue[self.n_slots:]
+            s = min(len(r.prompt) for r in cohort)
+            prompts = np.stack([r.prompt[:s] for r in cohort])
+            max_new = max(r.max_new for r in cohort)
+            toks = self.engine.generate(prompts, max_new)
+            for r, row in zip(cohort, toks):
+                r.out = row[: r.max_new].tolist()
+                r.done = True
+                self.completed.append(r)
+        return self.completed
+
+    def flush(self) -> List[Request]:
+        """Engine-protocol alias for :meth:`run` (serving/protocol.py)."""
+        return self.run()

@@ -33,7 +33,7 @@ order never depends on pool iteration order.
 Conservative tables are non-linear and cannot psum: the service refuses
 ``mode="conservative"`` at construction, as do the underlying distributed
 entry points (core.distributed.require_linear) and the single-shard
-endpoint's :meth:`~repro.serving.engine.SketchTopKEndpoint.to_sharded`
+endpoint's :meth:`~repro.serving.sketch_engine.SketchTopKEndpoint.to_sharded`
 promotion.
 """
 from __future__ import annotations
@@ -48,6 +48,7 @@ from repro.core import distributed as dist
 from repro.core import hierarchy as hh
 from repro.core import sketch as sk
 from repro.core.summary import SpaceSaving
+from repro.serving.migration import MigratingSurface
 
 
 def threshold_descent_topk(
@@ -81,7 +82,7 @@ def threshold_descent_topk(
     return items[:k], est[:k]
 
 
-class ShardedTopKService:
+class ShardedTopKService(MigratingSurface):
     """Heavy-hitter / top-k serving over a data-parallel device mesh.
 
     One service instance owns the whole mesh: ``n_shards`` is the product
@@ -195,53 +196,26 @@ class ShardedTopKService:
         self._blocks_since_sync += 1
         if self.sync_every and self._blocks_since_sync >= self.sync_every:
             self.sync()
-        if self._migration is not None:
-            # double-write window: the successor service pads/splits the
-            # raw block itself, exactly like a fresh service would -- the
-            # padded copy above must NOT leak into it
-            self._migration.offer(raw_items, raw_freqs)
-            if self._migration.ready:
-                self._cutover()
+        # double-write window: the successor service pads/splits the raw
+        # block itself, exactly like a fresh service would -- the padded
+        # copy above must NOT leak into it
+        self._migration_tick(raw_items, raw_freqs)
 
-    # -- hot spec migration (serving/migration.py) --------------------------
+    # -- hot spec migration hooks (serving/migration.MigratingSurface) ------
 
-    @property
-    def migrating(self) -> bool:
-        return self._migration is not None
-
-    @property
-    def migration_progress(self) -> float:
-        """Warmup progress in [0, 1]; 1.0 when no migration is in flight."""
-        return 1.0 if self._migration is None else self._migration.progress
-
-    def begin_migration(self, new_spec: sk.SketchSpec, key: jax.Array, *,
-                        warmup: int) -> None:
-        """Open a double-write window onto a successor service.
-
-        The successor is a fresh ShardedTopKService on ``new_spec`` over
-        the SAME mesh/data axes (same pool capacity, sync cadence, table
-        dtype); every subsequent block folds into both services.  Queries
-        keep serving from this service's merged tables until the
-        successor has absorbed ``warmup`` stream mass, then the service
-        cuts over to the successor's state wholesale and the old tables
-        are freed.  Shard-count invariance is preserved end to end: the
-        successor is itself bit-identical across shard counts.
-        """
-        from repro.serving.migration import SpecMigration
-
-        dist.require_linear(self.mode, "ShardedTopKService.begin_migration")
-        if self._migration is not None:
-            raise ValueError(
-                "a spec migration is already in flight "
-                f"({self._migration.progress:.0%} of warmup); one at a time")
-        incoming = ShardedTopKService(
+    def _build_successor(self, new_spec: sk.SketchSpec,
+                         key: jax.Array) -> "ShardedTopKService":
+        """A fresh service on ``new_spec`` over the SAME mesh/data axes
+        (same pool capacity, sync cadence, table dtype).  Shard-count
+        invariance is preserved end to end: the successor is itself
+        bit-identical across shard counts."""
+        return ShardedTopKService(
             new_spec, key, self.mesh, data_axes=self.data_axes,
             max_candidates_per_group=self.max_candidates,
             sync_every=self.sync_every, use_kernel=self.use_kernel,
             dtype=self._dtype)
-        self._migration = SpecMigration(incoming, warmup)
 
-    def _cutover(self) -> None:
+    def _adopt(self, inc: "ShardedTopKService") -> None:
         """Adopt the successor's state wholesale; free the old tables.
 
         The successor's jit-cached fold/merge wrappers come along (they
@@ -249,8 +223,6 @@ class ShardedTopKService:
         exactly this service's config from here on); the old wrappers,
         local/merged tables, and pools lose their last references.
         """
-        inc = self._migration.incoming
-        self._migration = None
         self.hspec = inc.hspec
         self.merged = inc.merged
         self._local = inc._local

@@ -3,7 +3,7 @@
 :class:`WindowedTopKService` answers "top-k in the last W epochs" (or with
 exponential time decay) by wrapping core/window.py's ring of per-epoch
 hierarchies behind the same ingest/query surface as the since-boot
-endpoints (serving/engine.SketchTopKEndpoint, sharded_topk):
+endpoints (serving/sketch_engine.SketchTopKEndpoint, sharded_topk):
 
   ingest    fold a weighted key block into the CURRENT epoch's tables via
             the shared-family hash cascade, and into that epoch's

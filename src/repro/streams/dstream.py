@@ -37,6 +37,7 @@ from repro.streams.sampling import BernoulliSampler
 from repro.streams.stats import (
     average_relative_error,
     exact_f2,
+    hierarchy_point_estimates,
     sketch_f2_upper,
 )
 
@@ -276,7 +277,8 @@ class DStreamHarness:
         if top:
             qi = np.asarray([k for k, _ in top], dtype=np.uint32)
             qt = np.asarray([f for _, f in top], dtype=np.float64)
-            est = self._point_estimates(qi)
+            est = hierarchy_point_estimates(
+                self.service.hspec, self.service.state(), qi)
             are = average_relative_error(est, qt)
         else:
             are = 0.0
@@ -301,17 +303,3 @@ class DStreamHarness:
             precision=precision, f2_exact=f2, f2_est=f2_est,
             f2_rel_err=f2_err)
 
-    def _point_estimates(self, query_items: np.ndarray) -> np.ndarray:
-        """CM point estimates from the merged window's finest level."""
-        import jax.numpy as jnp
-
-        from repro.core import sketch as sk
-
-        state = self.service.state()
-        hspec = self.service.hspec
-        fine = hspec.levels[-1]
-        level_items = hspec.level_items(
-            hspec.n_levels - 1, np.asarray(query_items, dtype=np.uint32))
-        est = sk.query(fine, state.states[-1],
-                       jnp.asarray(np.ascontiguousarray(level_items)))
-        return np.asarray(est, dtype=np.float64)

@@ -62,6 +62,42 @@ def sketch_f2_upper(table: np.ndarray) -> float:
     return float(np.min(np.sum(t * t, axis=1)))
 
 
+def hierarchy_point_estimates(hspec, state, query_items: np.ndarray) -> np.ndarray:
+    """CM point estimates for schema-ordered keys from a hierarchy's finest level.
+
+    The shared scoring primitive of the DStream harness
+    (streams/dstream.py) and the autotune launcher
+    (launch/serve.run_sketch_autotune): map the schema-ordered query rows
+    to the finest level's module order (``hspec.level_items`` -- identity
+    only when the partition happens to be in schema order) and point-query
+    that level's table.  Returns float64 estimates, one per query row.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import sketch as sk
+
+    fine = hspec.levels[-1]
+    level_items = hspec.level_items(
+        hspec.n_levels - 1, np.asarray(query_items, dtype=np.uint32))
+    est = sk.query(fine, state.states[-1],
+                   jnp.asarray(np.ascontiguousarray(level_items)))
+    return np.asarray(est, dtype=np.float64)
+
+
+def topk_point_are(hspec, state, query_items: np.ndarray,
+                   true_freqs: np.ndarray) -> float:
+    """ARE of a hierarchy's point estimates over a fixed query set.
+
+    ``average_relative_error(estimates, truth)`` with the estimates drawn
+    by :func:`hierarchy_point_estimates` -- the twin-endpoint scoring the
+    autotune launcher prints (auto-tuned vs frozen-spec endpoint on the
+    same window) and the per-batch top-k ARE of the streaming harness.
+    """
+    est = hierarchy_point_estimates(hspec, state, query_items)
+    return average_relative_error(est, np.asarray(true_freqs,
+                                                  dtype=np.float64))
+
+
 def exact_marginals(items: np.ndarray, freqs: np.ndarray, cols: Sequence[int]) -> np.ndarray:
     """O(value(cols), *) at every item row, from the full stream."""
     sub = np.ascontiguousarray(items[:, list(cols)])

@@ -1,0 +1,98 @@
+"""serving/kv_cache.py: sizing and slot-reuse helpers for decode caches.
+
+Covers the three helpers against real reduced configs across cache
+families: attention KV (gemma-7b), SSM conv/state (mamba2-130m), and the
+encoder-decoder cross-attention entries (seamless-m4t-medium):
+
+  * ``cache_bytes`` counts every leaf exactly (size * itemsize) and is
+    linear in the batch axis;
+  * ``new_cache`` builds the stacked per-block structure with the right
+    shapes, and only encoder-decoder configs get cross_k/cross_v entries
+    sized by ``frontend_len``;
+  * ``reset_slots`` zeroes exactly the finished slots' rows on every
+    batch-carrying leaf, preserving other slots, shapes, and dtypes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.serving.kv_cache import cache_bytes, new_cache, reset_slots
+
+
+def _leaves(cache):
+    return jax.tree.leaves(cache)
+
+
+def test_cache_bytes_counts_every_leaf():
+    cfg = get_reduced("gemma-7b")
+    cache = new_cache(cfg, batch=2, max_len=16)
+    manual = sum(int(np.asarray(x).size) * np.asarray(x).dtype.itemsize
+                 for x in _leaves(cache))
+    assert cache_bytes(cache) == manual > 0
+
+
+def test_cache_bytes_linear_in_batch():
+    cfg = get_reduced("gemma-7b")
+    b1 = cache_bytes(new_cache(cfg, batch=1, max_len=16))
+    b3 = cache_bytes(new_cache(cfg, batch=3, max_len=16))
+    assert b3 == 3 * b1
+
+
+def test_new_cache_attention_shapes():
+    cfg = get_reduced("gemma-7b")
+    batch, max_len = 2, 16
+    cache = new_cache(cfg, batch, max_len)
+    hd = cfg.resolved_head_dim
+    k = cache["layer_0"]["k"]
+    assert k.shape == (cfg.n_blocks, batch, max_len, cfg.n_kv_heads, hd)
+    assert k.dtype == cfg.activation_dtype
+    # decoder-only config: no cross-attention entries anywhere
+    assert all("cross_k" not in blk for blk in cache.values())
+
+
+def test_new_cache_ssm_entries():
+    cfg = get_reduced("mamba2-130m")
+    cache = new_cache(cfg, batch=2, max_len=16)
+    kinds = {cfg.layer_kind(i) for i in range(cfg.block_period)}
+    assert kinds != {"attn"}, "mamba config must have non-attention layers"
+    ssm_layers = [blk for blk in cache.values() if "ssm" in blk]
+    assert ssm_layers, "mamba config must produce SSM cache entries"
+    st = ssm_layers[0]["ssm"]
+    assert st.shape[1] == 2            # batch axis after the n_blocks stack
+    assert st.dtype == jnp.float32     # SSM state accumulates in f32
+
+
+def test_new_cache_encoder_decoder_cross_entries():
+    cfg = get_reduced("seamless-m4t-medium")
+    assert cfg.n_enc_layers > 0
+    batch = 2
+    cache = new_cache(cfg, batch, max_len=16)
+    ck = cache["layer_0"]["cross_k"]
+    # cross K/V are sized by the encoder output length = frontend_len
+    assert ck.shape == (cfg.n_blocks, batch, cfg.frontend_len,
+                        cfg.n_kv_heads, cfg.resolved_head_dim)
+
+
+def test_reset_slots_zeroes_only_finished_rows():
+    cfg = get_reduced("gemma-7b")
+    batch = 3
+    cache = new_cache(cfg, batch, max_len=8)
+    filled = jax.tree.map(lambda x: jnp.ones_like(x), cache)
+    mask = np.array([True, False, True])
+    out = reset_slots(filled, mask)
+    for before, after in zip(_leaves(filled), _leaves(out)):
+        assert after.shape == before.shape
+        assert after.dtype == before.dtype
+        a = np.asarray(after)
+        assert np.all(a[:, 0] == 0) and np.all(a[:, 2] == 0)
+        assert np.all(a[:, 1] == 1)
+
+
+def test_reset_slots_all_false_is_identity():
+    cfg = get_reduced("mamba2-130m")
+    cache = jax.tree.map(lambda x: jnp.ones_like(x),
+                         new_cache(cfg, batch=2, max_len=8))
+    out = reset_slots(cache, np.array([False, False]))
+    for before, after in zip(_leaves(cache), _leaves(out)):
+        assert np.array_equal(np.asarray(before), np.asarray(after))

@@ -169,3 +169,64 @@ def test_reservoir_weight_bias():
 def test_reservoir_empty():
     got_items, got_freqs = ReservoirSampler(capacity=4).sample()
     assert got_items.shape[0] == 0 and got_freqs.shape == (0,)
+
+
+# -- hierarchy point scoring (the shared twin-scoring helper) ---------------
+
+def _built_hierarchy(partition, seed=11):
+    from repro.serving.sketch_engine import SketchTopKEndpoint
+    from repro.streams import zipf_hh_workload
+
+    stream = zipf_hh_workload(n_src=80, n_tgt=160, n_edges=600,
+                              n_occurrences=3_000, seed=seed).stream
+    spec = sk.mod_sketch_spec(stream.schema, partition, (16, 16), 4)
+    ep = SketchTopKEndpoint(spec, jax.random.PRNGKey(0))
+    ep.ingest(stream.items, stream.freqs)
+    return stream, ep
+
+
+def test_hierarchy_point_estimates_match_direct_finest_query():
+    import jax.numpy as jnp
+
+    from repro.streams.stats import hierarchy_point_estimates
+
+    stream, ep = _built_hierarchy([(0,), (1,)])
+    q = stream.items[:32]
+    got = hierarchy_point_estimates(ep.hspec, ep.state, q)
+    level_items = ep.hspec.level_items(
+        ep.hspec.n_levels - 1, np.asarray(q, np.uint32))
+    want = np.asarray(sk.query(
+        ep.hspec.levels[-1], ep.state.states[-1],
+        jnp.asarray(np.ascontiguousarray(level_items))), dtype=np.float64)
+    assert np.array_equal(got, want)
+
+
+def test_hierarchy_point_estimates_respect_module_order():
+    """A partition out of schema order must be remapped, not queried raw."""
+    from repro.streams.stats import hierarchy_point_estimates
+
+    stream, ep = _built_hierarchy([(1,), (0,)])
+    q = stream.items[:64]
+    est = hierarchy_point_estimates(ep.hspec, ep.state, q)
+    # CM never under-estimates: only true with the correct column mapping
+    truth = {}
+    for row, f in zip(stream.items.tolist(), stream.freqs.tolist()):
+        truth[tuple(row)] = truth.get(tuple(row), 0) + int(f)
+    true = np.array([truth[tuple(r)] for r in q.tolist()], dtype=np.float64)
+    assert np.all(est >= true)
+
+
+def test_topk_point_are_arg_order():
+    """ARE must be relative to the TRUE frequencies (est, true order)."""
+    from repro.streams.stats import (hierarchy_point_estimates,
+                                     topk_point_are)
+
+    stream, ep = _built_hierarchy([(0,), (1,)])
+    q = stream.items[:32]
+    truth = {}
+    for row, f in zip(stream.items.tolist(), stream.freqs.tolist()):
+        truth[tuple(row)] = truth.get(tuple(row), 0) + int(f)
+    true = np.array([truth[tuple(r)] for r in q.tolist()], dtype=np.float64)
+    est = hierarchy_point_estimates(ep.hspec, ep.state, q)
+    want = average_relative_error(est, true)
+    assert topk_point_are(ep.hspec, ep.state, q, true) == pytest.approx(want)
