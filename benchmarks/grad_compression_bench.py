@@ -1,0 +1,126 @@
+"""Gradient-compression benchmarks -> BENCH_GRAD.json.
+
+Run via ``python -m benchmarks.run --only grad_compression``:
+
+  * ``grad/descent_vs_dense`` -- the headline latency pair: top-k
+    selection on a row-resolving leaf (beta_rows_cols skews the budget
+    so level 0 gets one cell per row) via beam descent
+    (training.grad_compression._descend_topk: level-0 row ranking ->
+    beam * cols signed candidate grid) vs the dense dequery baseline
+    (finest-level median of every coordinate -- the [w, N]
+    materialization the descent replaces).  Both paths are jitted and
+    produce identical above-noise selections (tests/test_training.py::
+    test_compression_descent_matches_dense_dequery).
+  * ``grad/relerr_ratio_*`` -- per-step relative error of one
+    compress -> decompress round trip at increasing compression ratios,
+    with the bytes-accurate ratio (tables + 8k second round) alongside
+    the nominal config ratio.
+  * ``grad/allreduce_bytes`` -- bytes crossing the DP axis per step:
+    dense gradient all-reduce (4N) vs the sketch protocol's table
+    all-reduce + k exact values (4 * sum_L w*h_L + 8k), timed over the
+    full compress_decompress step for context.
+
+CPU/interpret numbers: orchestration + jnp scatter costs, not kernel
+speed (docs/benchmarks.md, "interpret-mode caveat").
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import countsketch as cs
+from repro.training import grad_compression as gc
+
+_KEY = jax.random.PRNGKey(0)
+
+
+def _planted_grad(rng, shape, n_hot: int, mag: float = 8.0) -> np.ndarray:
+    g = rng.standard_normal(shape).astype(np.float32) * 0.01
+    n = g.size
+    hot = rng.choice(n, n_hot, replace=False)
+    g.reshape(-1)[hot] += rng.choice([-mag, mag], n_hot).astype(np.float32)
+    return g
+
+
+def grad_compression_descent_vs_dense() -> None:
+    # Row-resolving split: h = 1024*1024/(4*3) = 87381, beta=16 ->
+    # ranges = (1024, 85); k=64 -> beam=128 scans 128*1024 candidates
+    # instead of the dense baseline's 1024*1024.
+    shape = (1024, 1024)
+    cfg = gc.CompressionConfig(enabled=True, width=3, ratio=4.0,
+                               min_size=256, beta_rows_cols=16.0, k=64)
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(_planted_grad(rng, shape, 32))}
+    state = gc.init_compression(cfg, g, _KEY)
+    comp = state.compressors["w"]
+    plan = comp.plan
+    assert plan.beam < plan.rows, "descent must actually prune rows"
+
+    vals = g["w"].reshape(-1)
+    tables = tuple(jnp.zeros((s.width, s.table_size), jnp.float32)
+                   for s in plan.hspec.levels)
+    tables = cs.hier_fold_tables(plan.hspec, comp.params, tables,
+                                 comp.coords, vals)
+
+    descend = jax.jit(lambda t: gc._descend_topk(plan, comp.params, t))
+
+    def dense_topk(t):
+        hstate = cs.CountSketchHierarchy(comp.params, t)
+        est = cs.hier_query(plan.hspec, hstate, 1, comp.coords)
+        return jax.lax.top_k(jnp.abs(est), plan.k)[1]
+
+    dense = jax.jit(dense_topk)
+
+    us_descent, sel_d = timed(lambda: jax.block_until_ready(descend(tables)))
+    us_dense, sel_n = timed(lambda: jax.block_until_ready(dense(tables)))
+    scanned = plan.beam * plan.cols + plan.rows
+    emit("grad/descent_vs_dense", us_descent,
+         f"dense_us={us_dense:.1f};speedup={us_dense / us_descent:.2f};"
+         f"beam={plan.beam};rows={plan.rows};k={plan.k};"
+         f"scanned={scanned};n={plan.rows * plan.cols}")
+
+
+def grad_compression_relerr_vs_ratio() -> None:
+    shape = (256, 256)
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(_planted_grad(rng, shape, 24))}
+    for ratio in (4.0, 16.0, 64.0):
+        cfg = gc.CompressionConfig(enabled=True, width=3, ratio=ratio,
+                                   min_size=256)
+        state = gc.init_compression(cfg, g, _KEY)
+        t0 = time.perf_counter()
+        _, _, metrics = jax.block_until_ready(
+            gc.compress_decompress(cfg, g, state))
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"grad/relerr_ratio_{int(ratio)}", us,
+             f"rel_err={float(metrics['compress_rel_err']):.4f};"
+             f"nominal_ratio={ratio};"
+             f"bytes_ratio={gc.compression_ratio(cfg, g):.2f}")
+
+
+def grad_compression_allreduce_bytes() -> None:
+    shape = (512, 512)
+    cfg = gc.CompressionConfig(enabled=True, width=3, ratio=16.0,
+                               min_size=256)
+    rng = np.random.default_rng(2)
+    g = {"w": jnp.asarray(_planted_grad(rng, shape, 24))}
+    state = gc.init_compression(cfg, g, _KEY)
+    plan = state.compressors["w"].plan
+    grad_bytes = 4 * plan.rows * plan.cols
+    table_bytes = 4 * sum(s.width * s.table_size for s in plan.hspec.levels)
+    wire_bytes = table_bytes + 8 * plan.k
+
+    step = jax.jit(gc.compress_decompress, static_argnums=0)
+    us, _ = timed(lambda: jax.block_until_ready(step(cfg, g, state)))
+    emit("grad/allreduce_bytes", us,
+         f"grad_allreduce_bytes={grad_bytes};"
+         f"table_allreduce_bytes={wire_bytes};"
+         f"bytes_saved_x={grad_bytes / wire_bytes:.2f};k={plan.k}")
+
+
+ALL = [grad_compression_descent_vs_dense, grad_compression_relerr_vs_ratio,
+       grad_compression_allreduce_bytes]

@@ -40,14 +40,16 @@ def require_linear(mode: str, entry: str) -> None:
     """Refuse conservative tables on any sharded/merge entry point.
 
     Every distributed path in this repo relies on the table being linear in
-    the stream (psum of shard tables == table of the union stream).
-    Conservative tables (Estan-Varghese) are not, so each sharded entry
-    point calls this guard up front and fails loudly instead of producing a
-    silently wrong merged table.
+    the stream (psum of shard tables == table of the union stream).  That
+    holds for mode="linear" and for mode="signed" (Count-Sketch cells are
+    sums of +-1-weighted arrivals, so shard tables psum exactly).
+    Conservative tables (Estan-Varghese) are not linear, so each sharded
+    entry point calls this guard up front and fails loudly instead of
+    producing a silently wrong merged table.
     """
-    if mode != "linear":
+    if mode not in ("linear", "signed"):
         raise ValueError(
-            f"{entry} is only defined for linear sketches (got mode="
+            f"{entry} is only defined for linear tables (got mode="
             f"{mode!r}): conservative tables are not linear in the stream, "
             "so per-shard folds cannot be psum-merged -- conservative mode "
             "is single-shard by construction")
@@ -100,6 +102,42 @@ def sharded_build(
         )
         state = sk.update(spec, state, items_l, freqs_l)
         return jax.lax.psum(state.table, data_axes)
+
+    fn = shard_map(
+        local_fold,
+        mesh=mesh,
+        in_specs=(P(data_axes), P(data_axes)),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(items, freqs)
+
+
+def sharded_signed_build(
+    spec: sk.SketchSpec,
+    params,                      # core.countsketch.CountSketchParams
+    mesh: Mesh,
+    data_axes: Tuple[str, ...],
+    items: jax.Array,
+    freqs: jax.Array,            # signed (turnstile) weights
+    table_dtype=jnp.int32,
+) -> jax.Array:
+    """Signed (Count-Sketch) counterpart of :func:`sharded_build`.
+
+    Each device hashes its stream slice once (bucket indices + composite
+    sign bits), folds sign-weighted arrivals into a device-local table, and
+    psum-merges over ``data_axes``.  Exact by linearity: signed cells are
+    plain sums, so the merged table is bit-identical to the serial fold for
+    integer dtypes.  Returns the replicated merged delta [w, h].
+    """
+    from repro.core import countsketch as cs
+
+    def local_fold(items_l, freqs_l):
+        idx = sk.compute_indices(spec, params.base, items_l)
+        s = cs.signs(spec, params, items_l)
+        tbl = jnp.zeros((spec.width, spec.table_size), dtype=table_dtype)
+        sf = (s * freqs_l.astype(jnp.float32)[None, :]).astype(table_dtype)
+        return jax.lax.psum(cs.add_signed(tbl, idx, sf), data_axes)
 
     fn = shard_map(
         local_fold,

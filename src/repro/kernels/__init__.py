@@ -1,22 +1,35 @@
 """Pallas TPU kernels for the sketch hot path (linear update = one-hot MXU
-matmul, conservative update = VMEM-resident sequential min/max, query =
-one-hot gather + row-min), with jnp oracles in ref.py and jitd wrappers in
-ops.py.  Validated in interpret mode on CPU; set interpret=False on TPU."""
+matmul, conservative update = VMEM-resident sequential min/max, signed
+update = sign-weighted one-hot MXU matmul, query = one-hot gather + row
+reduce), with jnp oracles in ref.py and jitd wrappers in ops.py.
+Validated in interpret mode on CPU; set interpret=False on TPU."""
 from repro.kernels.hashes import IndexPlan, make_plan  # noqa: F401
 from repro.kernels.hier_query import (  # noqa: F401
     hier_candidate_query,
     hier_candidate_query_ref,
+    hier_candidate_query_signed,
+    hier_candidate_query_signed_ref,
 )
 from repro.kernels.hier_update import (  # noqa: F401
     HierPlan,
     hier_update_pallas,
     hier_update_ref,
+    hier_update_signed_pallas,
+    hier_update_signed_ref,
     make_hier_plan,
 )
 from repro.kernels.ops import (  # noqa: F401
     KernelHierarchy,
     KernelSketch,
     default_interpret,
+)
+from repro.kernels.sketch_update import (  # noqa: F401
+    sketch_update_pallas,
+    sketch_update_signed_pallas,
+)
+from repro.kernels.sketch_query import (  # noqa: F401
+    sketch_query_pallas,
+    sketch_query_signed_pallas,
 )
 from repro.kernels.sketch_update_conservative import (  # noqa: F401
     sketch_update_conservative_pallas,

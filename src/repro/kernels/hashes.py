@@ -62,3 +62,38 @@ def row_indices(plan: IndexPlan, chunks: jnp.ndarray, q_row: jnp.ndarray,
             acc = addmod_p31(acc, mulmod_p31_16(q_row[c], chunks[:, c]))
         idx = idx + (acc % jnp.uint32(rng_j)) * jnp.uint32(stride_j)
     return idx.astype(jnp.int32)
+
+
+def row_sign_bits(plan: IndexPlan, chunks: jnp.ndarray, sq_row: jnp.ndarray,
+                  sr_row: jnp.ndarray) -> jnp.ndarray:
+    """Packed cumulative sign-parity bits for ONE sketch row (signed mode).
+
+    Bit L is the XOR of the per-group CW-hash parities of groups 0..L,
+    i.e. the +-1 sign of the level-L prefix under the cascade (the flat /
+    finest sign is the top group's bit) -- the kernel-side twin of
+    core.countsketch.sign_bits, bit-identical per row.
+
+    chunks: uint32[B, C]   16-bit key digits
+    sq_row: uint32[C]      this row's sign multipliers
+    sr_row: uint32[m]      this row's per-group sign offsets
+    returns int32[B] packed parity bits
+    """
+    b = chunks.shape[0]
+    bits = jnp.zeros((b,), dtype=jnp.uint32)
+    cum = jnp.zeros((b,), dtype=jnp.uint32)
+    for j, cols in enumerate(plan.group_cols):
+        acc = jnp.broadcast_to(sr_row[j], (b,)).astype(jnp.uint32)
+        for c in cols:
+            acc = addmod_p31(acc, mulmod_p31_16(sq_row[c], chunks[:, c]))
+        cum = cum ^ (acc & jnp.uint32(1))
+        bits = bits | (cum << jnp.uint32(j))
+    return bits.astype(jnp.int32)
+
+
+def signs_from_bits(bits: jnp.ndarray, level) -> jnp.ndarray:
+    """float32 +-1 signs for one level from packed cumulative parity bits.
+
+    ``level`` may be a Python int or a traced scalar (the fused hierarchy
+    kernel reads it from per-tile metadata)."""
+    par = (bits >> jnp.int32(level)) & jnp.int32(1)
+    return 1.0 - 2.0 * par.astype(jnp.float32)

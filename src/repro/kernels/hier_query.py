@@ -110,6 +110,109 @@ def hier_candidate_query_ref(table: jax.Array, pp: jax.Array,
 
 
 # --------------------------------------------------------------------------
+# Signed (Count-Sketch) candidate grid
+# --------------------------------------------------------------------------
+#
+# The signed descent needs the same P x C gather with two extra separable
+# factors: the sign of child (p, c) at row k is ``sp[k, p] * sc[k, c]``
+# (cumulative parities XOR, so +-1 signs multiply), computed OUTSIDE the
+# kernel by core.countsketch.candidate_signed_partials exactly like the
+# bucket partials.  The kernel gathers the exact int32 cell value and
+# multiplies by the +-1 product in int32; the median over rows is the
+# wrapper's caller's reduce (rows are returned so the estimator stays
+# bit-comparable to the jnp reference).
+
+def _hier_kernel_signed(tile_h: int, pp_ref, cp_ref, sp_ref, sc_ref,
+                        tlo_ref, thi_ref, out_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pp = pp_ref[0]                                            # int32[P]
+    cp = cp_ref[0]                                            # int32[C]
+    p, c = pp.shape[0], cp.shape[0]
+    idx = (pp[:, None] + cp[None, :]).reshape(p * c)          # int32[P*C]
+    local = idx - t * tile_h
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (p * c, tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)    # [P*C, TH]
+    glo = jnp.dot(onehot, tlo_ref[0][:, None],
+                  preferred_element_type=jnp.float32)         # [P*C, 1]
+    ghi = jnp.dot(onehot, thi_ref[0][:, None],
+                  preferred_element_type=jnp.float32)
+    val = glo.astype(jnp.int32) + (ghi.astype(jnp.int32) << 16)
+    sgn = (sp_ref[0][:, None] * sc_ref[0][None, :]).reshape(p * c)
+    out_ref[...] = out_ref[...] + (val[:, 0] * sgn)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_h", "interpret"))
+def hier_candidate_query_signed(
+    table: jax.Array,   # int32[w, h] (padded internally to tile_h)
+    pp: jax.Array,      # uint32[w, P] prefix partial indices (pre-scaled)
+    cp: jax.Array,      # uint32[w, C] child partial indices (stride 1)
+    sp: jax.Array,      # +-1[w, P] prefix sign partials
+    sc: jax.Array,      # +-1[w, C] child sign partials
+    *,
+    tile_h: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-row signed estimates for every (prefix, candidate) child:
+    int32[w, P, C].  The caller takes the median over rows (float); keeping
+    the rows int32 keeps the gather bit-exact vs the jnp reference."""
+    if table.dtype != jnp.int32:
+        raise ValueError(
+            f"hier_candidate_query_signed supports int32 tables only (got "
+            f"{table.dtype}); use hier_candidate_query_signed_ref")
+    w, h = table.shape
+    h_pad = ((h + tile_h - 1) // tile_h) * tile_h
+    if h_pad != h:
+        # padding cells are zero and no child index reaches them (< h)
+        table = jnp.pad(table, ((0, 0), (0, h_pad - h)))
+    n_tiles = h_pad // tile_h
+    p = pp.shape[1]
+    c = cp.shape[1]
+    grid = (w, n_tiles)
+
+    tlo = (table & jnp.int32(0xFFFF)).astype(jnp.float32)
+    thi = ((table >> 16) & jnp.int32(0xFFFF)).astype(jnp.float32)
+
+    per_row = pl.pallas_call(
+        functools.partial(_hier_kernel_signed, tile_h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, p), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, c), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, p), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, c), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, tile_h), lambda k, t: (k, t)),
+            pl.BlockSpec((1, tile_h), lambda k, t: (k, t)),
+        ],
+        out_specs=pl.BlockSpec((1, p * c), lambda k, t: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, p * c), jnp.int32),
+        interpret=interpret,
+    )(pp.astype(jnp.int32), cp.astype(jnp.int32),
+      sp.astype(jnp.int32), sc.astype(jnp.int32), tlo, thi)
+    return per_row.reshape(w, p, c)
+
+
+@jax.jit
+def hier_candidate_query_signed_ref(table: jax.Array, pp: jax.Array,
+                                    cp: jax.Array, sp: jax.Array,
+                                    sc: jax.Array) -> jax.Array:
+    """Pure-jnp signed oracle: float32[w, P, C] per-row estimates (exact
+    for int32 tables; dtype-preserving gather, sign applied in float)."""
+    w = table.shape[0]
+    p, c = pp.shape[1], cp.shape[1]
+    idx = (pp.astype(jnp.int32)[:, :, None]
+           + cp.astype(jnp.int32)[:, None, :]).reshape(w, -1)
+    vals = jnp.take_along_axis(table, idx, axis=1).astype(jnp.float32)
+    vals = vals.reshape(w, p, c)
+    return vals * sp.astype(jnp.float32)[:, :, None] \
+        * sc.astype(jnp.float32)[:, None, :]
+
+
+# --------------------------------------------------------------------------
 # Request axis: Q concurrent queries in the one launch
 # --------------------------------------------------------------------------
 #

@@ -51,7 +51,13 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.hashes import IndexPlan, make_plan, row_indices
+from repro.kernels.hashes import (
+    IndexPlan,
+    make_plan,
+    row_indices,
+    row_sign_bits,
+    signs_from_bits,
+)
 
 _LIMB_BITS = 12
 _LIMB_MASK = (1 << _LIMB_BITS) - 1
@@ -236,6 +242,176 @@ def hier_update_pallas(
             input_output_aliases={5: 0},
             interpret=interpret,
         )(chunks, freqs.astype(table.dtype), q, r, meta, table)
+
+
+# --------------------------------------------------------------------------
+# Signed (Count-Sketch) fused hierarchy fold
+# --------------------------------------------------------------------------
+#
+# Same single-launch cascade with a second VMEM scratch: the packed
+# cumulative sign-parity bits (kernels/hashes.row_sign_bits) are hashed once
+# per row alongside the finest index, and each tile reads ITS level's sign
+# as one bit -- the metadata grows a third column carrying the tile's level
+# index.  The sign multiplies the frequency limbs before the MXU
+# contraction, exactly as in kernels/sketch_update.py's signed kernels.
+
+def _tile_meta_signed(hplan: HierPlan) -> np.ndarray:
+    """int32[n_tiles, 3]: (level divisor, tile base column, level index)."""
+    rows = []
+    for l, pad in enumerate(hplan.level_pads):
+        for t in range(pad // hplan.tile_h):
+            rows.append((hplan.level_divs[l], t * hplan.tile_h, l))
+    return np.asarray(rows, dtype=np.int32)
+
+
+def _hier_kernel_signed_int(hplan: HierPlan, tile_h: int,
+                            chunks_ref, flo_ref, fhi_ref, q_ref, r_ref,
+                            sq_ref, sr_ref, meta_ref,
+                            table_in_ref, table_out_ref,
+                            idx_scratch_ref, bits_scratch_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _hash_once():
+        idx_scratch_ref[...] = row_indices(
+            hplan.plan, chunks_ref[...], q_ref[0], r_ref[0])
+        bits_scratch_ref[...] = row_sign_bits(
+            hplan.plan, chunks_ref[...], sq_ref[0], sr_ref[0])
+
+    local = _local_lanes(idx_scratch_ref, meta_ref)
+    s = signs_from_bits(bits_scratch_ref[...], meta_ref[0, 2])  # f32[B]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)      # [B, TH]
+    dot_lo = jnp.dot((s * flo_ref[...])[None, :], onehot,
+                     preferred_element_type=jnp.float32)        # [1, TH]
+    dot_hi = jnp.dot((s * fhi_ref[...])[None, :], onehot,
+                     preferred_element_type=jnp.float32)
+    delta = dot_lo.astype(jnp.int32) + (dot_hi.astype(jnp.int32) << _LIMB_BITS)
+    table_out_ref[...] = table_in_ref[...] + delta
+
+
+def _hier_kernel_signed_f32(hplan: HierPlan, tile_h: int,
+                            chunks_ref, f_ref, q_ref, r_ref,
+                            sq_ref, sr_ref, meta_ref,
+                            table_in_ref, table_out_ref,
+                            idx_scratch_ref, bits_scratch_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _hash_once():
+        idx_scratch_ref[...] = row_indices(
+            hplan.plan, chunks_ref[...], q_ref[0], r_ref[0])
+        bits_scratch_ref[...] = row_sign_bits(
+            hplan.plan, chunks_ref[...], sq_ref[0], sr_ref[0])
+
+    local = _local_lanes(idx_scratch_ref, meta_ref)
+    s = signs_from_bits(bits_scratch_ref[...], meta_ref[0, 2])
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)
+    delta = jnp.dot((s * f_ref[...])[None, :], onehot,
+                    preferred_element_type=jnp.float32)
+    table_out_ref[...] = table_in_ref[...] + delta[0][None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("hplan", "interpret"), donate_argnums=(1,)
+)
+def hier_update_signed_pallas(
+    hplan: HierPlan,
+    table: jax.Array,    # [w, hplan.padded_cols] int32 or float32
+    chunks: jax.Array,   # uint32[B, C] finest-layout 16-bit key digits
+    freqs: jax.Array,    # int32[B] or float32[B], signed
+    q: jax.Array,        # uint32[w, C] bucket multipliers
+    r: jax.Array,        # uint32[w, m] bucket offsets
+    sq: jax.Array,       # uint32[w, C] sign multipliers
+    sr: jax.Array,       # uint32[w, m] sign offsets
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Signed cascade fold into every level's table in ONE pallas_call.
+
+    cell_L += sign_L(row, item) * f, where sign_L is bit L of the packed
+    cumulative parities -- bit-exact vs core.countsketch.hier_update on
+    int32 tables (|f| < 2^24, negatives allowed).  Same donation contract
+    as :func:`hier_update_pallas`."""
+    w, cols = table.shape
+    if cols != hplan.padded_cols:
+        raise ValueError(
+            f"concatenated table has {cols} columns, plan expects "
+            f"{hplan.padded_cols}")
+    tile_h = hplan.tile_h
+    b, c = chunks.shape
+    grid = (w, hplan.n_tiles)
+    meta = jnp.asarray(_tile_meta_signed(hplan))
+
+    chunk_spec = pl.BlockSpec((b, c), lambda k, t: (0, 0))
+    f_spec = pl.BlockSpec((b,), lambda k, t: (0,))
+    q_spec = pl.BlockSpec((1, c), lambda k, t: (k, 0))
+    r_spec = pl.BlockSpec((1, r.shape[1]), lambda k, t: (k, 0))
+    meta_spec = pl.BlockSpec((1, 3), lambda k, t: (t, 0))
+    tbl_spec = pl.BlockSpec((1, tile_h), lambda k, t: (k, t))
+    scratch = [pltpu.VMEM((b,), jnp.int32), pltpu.VMEM((b,), jnp.int32)]
+
+    if jnp.issubdtype(table.dtype, jnp.integer):
+        fi = freqs.astype(jnp.int32)
+        flo = (fi & _LIMB_MASK).astype(jnp.float32)
+        fhi = (fi >> _LIMB_BITS).astype(jnp.float32)   # arithmetic shift
+        kernel = functools.partial(_hier_kernel_signed_int, hplan, tile_h)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[chunk_spec, f_spec, f_spec, q_spec, r_spec,
+                      q_spec, r_spec, meta_spec, tbl_spec],
+            out_specs=tbl_spec,
+            out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+            scratch_shapes=scratch,
+            input_output_aliases={8: 0},
+            interpret=interpret,
+        )(chunks, flo, fhi, q, r, sq, sr, meta, table)
+    else:
+        kernel = functools.partial(_hier_kernel_signed_f32, hplan, tile_h)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[chunk_spec, f_spec, q_spec, r_spec,
+                      q_spec, r_spec, meta_spec, tbl_spec],
+            out_specs=tbl_spec,
+            out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+            scratch_shapes=scratch,
+            input_output_aliases={7: 0},
+            interpret=interpret,
+        )(chunks, freqs.astype(table.dtype), q, r, sq, sr, meta, table)
+
+
+@functools.partial(jax.jit, static_argnames=("hplan",))
+def hier_update_signed_ref(
+    hplan: HierPlan,
+    table: jax.Array,
+    chunks: jax.Array,
+    freqs: jax.Array,
+    q: jax.Array,
+    r: jax.Array,
+    sq: jax.Array,
+    sr: jax.Array,
+) -> jax.Array:
+    """jnp oracle for the signed fused fold over the same concatenated
+    padded table: hash indices + sign bits once per row, cascade divisions,
+    per-level signed scatter-adds."""
+    idx_fine = jnp.stack([row_indices(hplan.plan, chunks, q[k], r[k])
+                          for k in range(hplan.plan.width)], axis=0)
+    bits = jnp.stack([row_sign_bits(hplan.plan, chunks, sq[k], sr[k])
+                      for k in range(hplan.plan.width)], axis=0)  # [w, B]
+    w = idx_fine.shape[0]
+    out = table
+    for lvl, (off, div) in enumerate(zip(hplan.level_offsets,
+                                         hplan.level_divs)):
+        idx = jax.lax.div(idx_fine, jnp.int32(div)) + off
+        flat = (jnp.arange(w, dtype=jnp.int32)[:, None] * table.shape[1]
+                + idx).reshape(-1)
+        s = signs_from_bits(bits, lvl)
+        f = (s * freqs.astype(jnp.float32)[None, :]).astype(table.dtype)
+        out = out.reshape(-1).at[flat].add(f.reshape(-1)).reshape(table.shape)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("hplan",))

@@ -7,7 +7,7 @@ the whole stream), and CPU fallback via ``interpret=True`` (the kernel body
 executes in Python on CPU -- bit-identical logic, which is how the kernels
 are validated in this container; on TPU set ``interpret=False``).
 
-Two update modes share the wrapper:
+Three update modes share the wrapper:
 
   * ``mode="linear"`` (default): the one-hot MXU matmul update
     (kernels/sketch_update.py).  The table stays linear in the stream, so
@@ -20,6 +20,12 @@ Two update modes share the wrapper:
     unchanged.  When the table working set exceeds the VMEM budget the
     update transparently takes the jnp reference path
     (core.sketch.update_conservative), block by block.
+  * ``mode="signed"``: the Count-Sketch variant (core/countsketch.py) --
+    the same one-hot limb matmul with the per-group composite +-1 sign
+    folded into the frequency limbs, a median-of-rows estimator on the
+    query side, and signed (turnstile) frequencies allowed on int tables.
+    Signed tables ARE linear, so merge / sharded psum folds / table
+    donation all apply exactly as in linear mode.
 """
 from __future__ import annotations
 
@@ -29,19 +35,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import countsketch as cskt
 from repro.core import sketch as sk
 from repro.kernels.hashes import make_plan
-from repro.kernels.hier_update import hier_update_pallas, make_hier_plan
-from repro.kernels.sketch_update import padded_table_size, sketch_update_pallas
+from repro.kernels.hier_update import (
+    hier_update_pallas,
+    hier_update_signed_pallas,
+    make_hier_plan,
+)
+from repro.kernels.sketch_update import (
+    padded_table_size,
+    sketch_update_pallas,
+    sketch_update_signed_pallas,
+)
 from repro.kernels.sketch_update_conservative import (
     conservative_chunk_b,
     sketch_update_conservative_pallas,
 )
-from repro.kernels.sketch_query import sketch_query_pallas
+from repro.kernels.sketch_query import (
+    sketch_query_pallas,
+    sketch_query_signed_pallas,
+)
 
 _MAX_KERNEL_FREQ = 1 << 24  # two 12-bit limbs
 
-MODES = ("linear", "conservative")
+MODES = ("linear", "conservative", "signed")
 
 
 def default_interpret() -> bool:
@@ -70,6 +88,19 @@ def check_linear_kernel_freqs(freqs: np.ndarray, table_dtype) -> None:
             "use the core.sketch path (or a float32 table)")
 
 
+def check_signed_kernel_freqs(freqs: np.ndarray, table_dtype) -> None:
+    """Signed-mode frequency guard: negatives are the point (turnstile /
+    gradient deltas), so only the limb-split magnitude bound applies.  The
+    signed kernels split f arithmetically -- f = (f & 0xFFF) + ((f >> 12)
+    << 12) -- which is exact for |f| < 2^24 including negative f."""
+    if freqs.size == 0 or not jnp.issubdtype(table_dtype, jnp.integer):
+        return
+    if np.abs(freqs).max() >= _MAX_KERNEL_FREQ:
+        raise ValueError(
+            "per-arrival |frequency| >= 2^24 overflows the int-table "
+            "limb split: use the core.countsketch path")
+
+
 class KernelSketch:
     """Sketch whose table lives padded for the Pallas kernels."""
 
@@ -81,7 +112,14 @@ class KernelSketch:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.spec = spec
         self.plan = make_plan(spec)
-        self.params = sk.init_params(spec, key)
+        if mode == "signed":
+            # draw through countsketch so the jnp reference built from the
+            # same key is bit-identical (bucket AND sign hashes)
+            self.cs_params = cskt.init_params(spec, key)
+            self.params = self.cs_params.base
+        else:
+            self.cs_params = None
+            self.params = sk.init_params(spec, key)
         self.tile_h = int(tile_h)
         self.block_b = int(block_b)
         self.h_pad = padded_table_size(spec.table_size, tile_h)
@@ -109,6 +147,9 @@ class KernelSketch:
         if self.mode == "conservative":
             sk.check_conservative_freqs(freqs, self.table.dtype)
             return
+        if self.mode == "signed":
+            check_signed_kernel_freqs(freqs, self.table.dtype)
+            return
         check_linear_kernel_freqs(freqs, self.table.dtype)
 
     def update(self, items, freqs) -> None:
@@ -127,6 +168,13 @@ class KernelSketch:
             if self.mode == "conservative":
                 self._update_block_conservative(blk_i, chunks,
                                                 jnp.asarray(blk_f))
+            elif self.mode == "signed":
+                self.table = sketch_update_signed_pallas(
+                    self.plan, self.table, chunks, jnp.asarray(blk_f),
+                    self.params.q, self.params.r,
+                    self.cs_params.sign_q, self.cs_params.sign_r,
+                    tile_h=self.tile_h, interpret=self.interpret,
+                )
             else:
                 self.table = sketch_update_pallas(
                     self.plan, self.table, chunks, jnp.asarray(blk_f),
@@ -155,13 +203,38 @@ class KernelSketch:
             self.table = self.table.at[:, :h].set(state.table)
 
     def query(self, items) -> np.ndarray:
+        """Point estimates: min over rows (linear/conservative) or the
+        unbiased median over signed rows (signed mode, float32)."""
         items = np.asarray(items, dtype=np.uint32)
+        if self.mode == "signed":
+            rows = self.query_rows(items)
+            return np.median(rows.astype(np.float32), axis=0)
         chunks = self.spec.schema.module_chunks(jnp.asarray(items))
         est = sketch_query_pallas(
             self.plan, self.table, chunks, self.params.q, self.params.r,
             tile_h=self.tile_h, interpret=self.interpret,
         )
         return np.asarray(est)
+
+    def query_rows(self, items) -> np.ndarray:
+        """Signed mode only: per-row signed estimates [w, Q] (the medians'
+        raw material; bit-exact vs core.countsketch.query_rows on int32
+        tables).  Float tables take the jnp reference gather."""
+        if self.mode != "signed":
+            raise ValueError("query_rows is the signed-mode estimator; "
+                             "linear/conservative sketches use query()")
+        items = np.asarray(items, dtype=np.uint32)
+        if self.table.dtype == jnp.int32:
+            chunks = self.spec.schema.module_chunks(jnp.asarray(items))
+            rows = sketch_query_signed_pallas(
+                self.plan, self.table, chunks, self.params.q, self.params.r,
+                self.cs_params.sign_q, self.cs_params.sign_r,
+                tile_h=self.tile_h, interpret=self.interpret,
+            )
+            return np.asarray(rows)
+        rows, _ = cskt.query_rows(self.spec, self.cs_state(),
+                                  jnp.asarray(items))
+        return np.asarray(rows)
 
     def sharded_update(self, mesh, data_axes, items, freqs) -> None:
         """Distributed fold: shard the block over ``data_axes``, psum-merge
@@ -192,9 +265,14 @@ class KernelSketch:
         cache_key = (mesh, tuple(data_axes))
         fold = self._sharded_folds.get(cache_key)
         if fold is None:
-            fold = jax.jit(lambda it, fr: dist.sharded_build(
-                self.spec, self.params, mesh, tuple(data_axes), it, fr,
-                table_dtype=self.table.dtype))
+            if self.mode == "signed":
+                fold = jax.jit(lambda it, fr: dist.sharded_signed_build(
+                    self.spec, self.cs_params, mesh, tuple(data_axes),
+                    it, fr, table_dtype=self.table.dtype))
+            else:
+                fold = jax.jit(lambda it, fr: dist.sharded_build(
+                    self.spec, self.params, mesh, tuple(data_axes), it, fr,
+                    table_dtype=self.table.dtype))
             self._sharded_folds[cache_key] = fold
         delta = fold(jnp.asarray(items), jnp.asarray(freqs))
         h = self.spec.table_size
@@ -208,10 +286,16 @@ class KernelSketch:
         conservatively built tables is NOT the table of the concatenated
         stream -- so merging them is refused rather than silently wrong.
         """
-        if self.mode != "linear" or other.mode != "linear":
+        if self.mode == "conservative" or other.mode == "conservative":
             raise ValueError(
-                "merge is only defined for linear-mode sketches: "
-                "conservative tables are not linear in the stream")
+                "merge is only defined for linear-table sketches (linear "
+                "or signed mode): conservative tables are not linear in "
+                "the stream")
+        if self.mode != other.mode:
+            raise ValueError(
+                "merge requires identical modes (a min-estimated and a "
+                "median-estimated table are different objects even though "
+                "both are linear)")
         if self.spec != other.spec or self.h_pad != other.h_pad:
             raise ValueError("merge requires identical specs and padding")
         if self.table.dtype != other.table.dtype:
@@ -222,6 +306,14 @@ class KernelSketch:
                 and np.array_equal(np.asarray(self.params.r), np.asarray(other.params.r))):
             raise ValueError(
                 "merge requires identical hash params (same spec and key)")
+        if self.mode == "signed" and not (
+                np.array_equal(np.asarray(self.cs_params.sign_q),
+                               np.asarray(other.cs_params.sign_q))
+                and np.array_equal(np.asarray(self.cs_params.sign_r),
+                                   np.asarray(other.cs_params.sign_r))):
+            raise ValueError(
+                "merge requires identical sign-hash params (same spec "
+                "and key)")
         self.table = self.table + other.table
 
     def state(self) -> sk.SketchState:
@@ -233,10 +325,22 @@ class KernelSketch:
         """
         if self.mode != "linear":
             raise ValueError(
-                "state() feeds the cell-wise merge path, which is invalid "
-                "for conservative tables; use table_view() or query()")
+                "state() feeds the min-estimated SketchState cell-wise merge "
+                "path; conservative tables must not enter it and signed "
+                "tables carry sign params it cannot hold -- use cs_state() "
+                "(signed) or table_view()/query()")
         return sk.SketchState(params=self.params,
                               table=self.table[:, : self.spec.table_size])
+
+    def cs_state(self) -> "cskt.CountSketchState":
+        """Unpadded CountSketchState view (signed mode's merge/reference
+        currency, the analogue of :meth:`state`)."""
+        if self.mode != "signed":
+            raise ValueError("cs_state() is the signed-mode view; "
+                             "linear sketches use state()")
+        return cskt.CountSketchState(
+            params=self.cs_params,
+            table=self.table[:, : self.spec.table_size])
 
     def table_view(self) -> np.ndarray:
         """Read-only unpadded table copy (inspection/tests; any mode)."""
@@ -264,13 +368,25 @@ class KernelHierarchy:
 
     def __init__(self, hspec, key: jax.Array, *, tile_h: int = 512,
                  block_b: int = 1024, dtype=jnp.int32,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, mode: str = "linear"):
+        if mode not in ("linear", "signed"):
+            raise ValueError(
+                "KernelHierarchy modes are 'linear' and 'signed' "
+                "(conservative hierarchies take "
+                f"core.hierarchy.update_conservative), got {mode!r}")
         from repro.core import hierarchy as hh
 
         self._hh = hh
         self.hspec = hspec
         self.hplan = make_hier_plan(hspec, tile_h)
-        self.params = sk.init_params(hspec.levels[-1], key)  # shared family
+        self.mode = mode
+        if mode == "signed":
+            # same-key bit parity with the core.countsketch hierarchy
+            self.cs_params = cskt.init_params(hspec.levels[-1], key)
+            self.params = self.cs_params.base
+        else:
+            self.cs_params = None
+            self.params = sk.init_params(hspec.levels[-1], key)  # shared family
         self.block_b = int(block_b)
         self.table = jnp.zeros((hspec.base.width, self.hplan.padded_cols),
                                dtype=dtype)
@@ -288,6 +404,8 @@ class KernelHierarchy:
         self._hh = hh
         self.hspec = hspec
         self.hplan = make_hier_plan(hspec, tile_h)
+        self.mode = "linear"   # HierarchyState carries no sign params
+        self.cs_params = None
         self.params = state.states[-1].params
         self.block_b = int(block_b)
         self.interpret = default_interpret() if interpret is None else interpret
@@ -304,6 +422,11 @@ class KernelHierarchy:
         with the finest params only and derives every level by division,
         which is meaningless for independently drawn per-level params.
         """
+        if self.mode != "linear":
+            raise ValueError(
+                "load_state() takes a (sign-less) HierarchyState and is "
+                "linear-mode only; signed hierarchies are built by ingest "
+                "from their own key")
         if not self._hh.params_share_prefix(state):
             raise ValueError(
                 "KernelHierarchy requires the shared per-group hash family "
@@ -320,7 +443,15 @@ class KernelHierarchy:
         self._state_cache = None
 
     def state(self):
-        """HierarchyState view (sliced, unpadded); cached until next ingest."""
+        """HierarchyState view (sliced, unpadded); cached until next ingest.
+
+        Linear mode only: HierarchyState is the min-estimated descent/merge
+        currency and carries no sign params -- the signed view is
+        :meth:`cs_state`."""
+        if self.mode != "linear":
+            raise ValueError(
+                "state() is the linear (Count-Min) hierarchy view; signed "
+                "hierarchies use cs_state()")
         if self._state_cache is None:
             states = []
             for l, (off, h_l) in enumerate(zip(self.hplan.level_offsets,
@@ -331,12 +462,31 @@ class KernelHierarchy:
             self._state_cache = self._hh.HierarchyState(states=tuple(states))
         return self._state_cache
 
+    def cs_state(self) -> "cskt.CountSketchHierarchy":
+        """CountSketchHierarchy view (sliced, unpadded); cached until next
+        ingest -- feeds the signed candidate queries and threshold descent
+        (core.countsketch.candidate_estimates / find_heavy_hitters)."""
+        if self.mode != "signed":
+            raise ValueError("cs_state() is the signed hierarchy view; "
+                             "linear hierarchies use state()")
+        if self._state_cache is None:
+            tables = tuple(
+                self.table[:, off : off + h_l]
+                for off, h_l in zip(self.hplan.level_offsets,
+                                    self.hplan.level_sizes))
+            self._state_cache = cskt.CountSketchHierarchy(
+                params=self.cs_params, tables=tables)
+        return self._state_cache
+
     # -- ingest --------------------------------------------------------------
     def update(self, items, freqs) -> None:
         """Fold a weighted block: one fused launch per fixed-size sub-block."""
         items = np.asarray(items, dtype=np.uint32)
         freqs = np.asarray(freqs)
-        check_linear_kernel_freqs(freqs, self.table.dtype)
+        if self.mode == "signed":
+            check_signed_kernel_freqs(freqs, self.table.dtype)
+        else:
+            check_linear_kernel_freqs(freqs, self.table.dtype)
         schema = self.hspec.levels[-1].schema
         n_fine = self.hspec.n_levels - 1
         b = self.block_b
@@ -350,8 +500,16 @@ class KernelHierarchy:
             # group-major column order = the finest level's chunk layout
             ordered = np.asarray(self.hspec.level_items(n_fine, blk_i))
             chunks = schema.module_chunks(jnp.asarray(ordered))
-            self.table = hier_update_pallas(
-                self.hplan, self.table, chunks, jnp.asarray(blk_f),
-                self.params.q, self.params.r, interpret=self.interpret,
-            )
+            if self.mode == "signed":
+                self.table = hier_update_signed_pallas(
+                    self.hplan, self.table, chunks, jnp.asarray(blk_f),
+                    self.params.q, self.params.r,
+                    self.cs_params.sign_q, self.cs_params.sign_r,
+                    interpret=self.interpret,
+                )
+            else:
+                self.table = hier_update_pallas(
+                    self.hplan, self.table, chunks, jnp.asarray(blk_f),
+                    self.params.q, self.params.r, interpret=self.interpret,
+                )
         self._state_cache = None

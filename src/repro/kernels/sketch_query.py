@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.hashes import IndexPlan, row_indices
+from repro.kernels.hashes import IndexPlan, row_indices, row_sign_bits
 
 
 def _query_kernel(plan: IndexPlan, tile_h: int,
@@ -81,3 +81,79 @@ def sketch_query_pallas(
         interpret=interpret,
     )(chunks, q, r, tlo, thi)
     return jnp.min(per_row, axis=0)
+
+
+def _query_kernel_signed(plan: IndexPlan, tile_h: int,
+                         chunks_ref, q_ref, r_ref, sq_ref, sr_ref,
+                         tlo_ref, thi_ref, out_ref):
+    """Signed point query: the same exact two-limb gather, multiplied by the
+    in-kernel +-1 sign (int32, so negative cell values reconstructed by the
+    two's-complement wrap stay exact)."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = row_indices(plan, chunks_ref[...], q_ref[0], r_ref[0])     # int32[Q]
+    local = idx - t * tile_h
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)           # [Q, TH]
+    glo = jnp.dot(onehot, tlo_ref[0][:, None],
+                  preferred_element_type=jnp.float32)                # [Q, 1]
+    ghi = jnp.dot(onehot, thi_ref[0][:, None],
+                  preferred_element_type=jnp.float32)
+    val = glo.astype(jnp.int32) + (ghi.astype(jnp.int32) << 16)      # exact
+    bits = row_sign_bits(plan, chunks_ref[...], sq_ref[0], sr_ref[0])
+    s = 1 - 2 * ((bits >> jnp.int32(len(plan.group_cols) - 1))
+                 & jnp.int32(1))                                     # int32[Q]
+    out_ref[...] = out_ref[...] + (val[:, 0] * s)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "tile_h", "interpret"))
+def sketch_query_signed_pallas(
+    plan: IndexPlan,
+    table: jax.Array,    # int32[w, h_pad]
+    chunks: jax.Array,   # uint32[Q, C]
+    q: jax.Array,        # uint32[w, C]
+    r: jax.Array,        # uint32[w, m]
+    sq: jax.Array,       # uint32[w, C]
+    sr: jax.Array,       # uint32[w, m]
+    *,
+    tile_h: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-row signed estimates: int32[w, Q] (caller takes the median).
+
+    Returning the rows rather than the median keeps the kernel output
+    bit-comparable to core.countsketch.query_rows and lets callers apply
+    row-level robustness filters."""
+    w, h_pad = table.shape
+    if h_pad % tile_h:
+        raise ValueError(f"padded table width {h_pad} not a multiple of {tile_h}")
+    if table.dtype != jnp.int32:
+        raise ValueError("signed query kernel covers int32 tables only; "
+                         "use the jnp reference for other dtypes")
+    n_tiles = h_pad // tile_h
+    nq, c = chunks.shape
+    grid = (w, n_tiles)
+
+    tlo = (table & jnp.int32(0xFFFF)).astype(jnp.float32)
+    thi = ((table >> 16) & jnp.int32(0xFFFF)).astype(jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_query_kernel_signed, plan, tile_h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nq, c), lambda k, t: (0, 0)),
+            pl.BlockSpec((1, c), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, r.shape[1]), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, c), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, r.shape[1]), lambda k, t: (k, 0)),
+            pl.BlockSpec((1, tile_h), lambda k, t: (k, t)),
+            pl.BlockSpec((1, tile_h), lambda k, t: (k, t)),
+        ],
+        out_specs=pl.BlockSpec((1, nq), lambda k, t: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, nq), jnp.int32),
+        interpret=interpret,
+    )(chunks, q, r, sq, sr, tlo, thi)

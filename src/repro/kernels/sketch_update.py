@@ -29,7 +29,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.hashes import IndexPlan, row_indices
+from repro.kernels.hashes import (
+    IndexPlan,
+    row_indices,
+    row_sign_bits,
+    signs_from_bits,
+)
 
 _LIMB_BITS = 12
 _LIMB_MASK = (1 << _LIMB_BITS) - 1
@@ -62,6 +67,48 @@ def _update_kernel_f32(plan: IndexPlan, tile_h: int,
     lanes = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], tile_h), 1)
     onehot = (local[:, None] == lanes).astype(jnp.float32)
     delta = jnp.dot(f_ref[...][None, :], onehot,
+                    preferred_element_type=jnp.float32)
+    table_out_ref[...] = table_in_ref[...] + delta[0][None, :]
+
+
+def _update_kernel_signed_int(plan: IndexPlan, tile_h: int,
+                              chunks_ref, flo_ref, fhi_ref, q_ref, r_ref,
+                              sq_ref, sr_ref, table_in_ref, table_out_ref):
+    """Signed mode, int32 table: the +-1 sign multiplies both frequency
+    limbs before the contraction.  Limbs come from the arithmetic split
+    f = (f & 0xFFF) + ((f >> 12) << 12), so negative values decompose
+    exactly; per-limb partial sums stay < 2^23 in magnitude (|s*limb| <=
+    4095, B <= 1024 checked by the wrapper path's callers), hence exact in
+    f32, and the int32 recombination wraps identically to the jnp
+    scatter-add reference."""
+    t = pl.program_id(1)
+    idx = row_indices(plan, chunks_ref[...], q_ref[0], r_ref[0])      # int32[B]
+    bits = row_sign_bits(plan, chunks_ref[...], sq_ref[0], sr_ref[0])
+    s = signs_from_bits(bits, len(plan.group_cols) - 1)               # f32[B]
+    local = idx - t * tile_h
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)            # [B, TH]
+    dot_lo = jnp.dot((s * flo_ref[...])[None, :], onehot,
+                     preferred_element_type=jnp.float32)              # [1, TH]
+    dot_hi = jnp.dot((s * fhi_ref[...])[None, :], onehot,
+                     preferred_element_type=jnp.float32)
+    delta = dot_lo.astype(jnp.int32) + (dot_hi.astype(jnp.int32) << _LIMB_BITS)
+    table_out_ref[...] = table_in_ref[...] + delta
+
+
+def _update_kernel_signed_f32(plan: IndexPlan, tile_h: int,
+                              chunks_ref, f_ref, q_ref, r_ref,
+                              sq_ref, sr_ref, table_in_ref, table_out_ref):
+    """Signed mode, float32 table (gradient sketches): one contraction of
+    the sign-flipped values."""
+    t = pl.program_id(1)
+    idx = row_indices(plan, chunks_ref[...], q_ref[0], r_ref[0])
+    bits = row_sign_bits(plan, chunks_ref[...], sq_ref[0], sr_ref[0])
+    s = signs_from_bits(bits, len(plan.group_cols) - 1)
+    local = idx - t * tile_h
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], tile_h), 1)
+    onehot = (local[:, None] == lanes).astype(jnp.float32)
+    delta = jnp.dot((s * f_ref[...])[None, :], onehot,
                     preferred_element_type=jnp.float32)
     table_out_ref[...] = table_in_ref[...] + delta[0][None, :]
 
@@ -128,3 +175,67 @@ def sketch_update_pallas(
             input_output_aliases={4: 0},
             interpret=interpret,
         )(chunks, freqs.astype(table.dtype), q, r, table)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "tile_h", "interpret"),
+    donate_argnums=(1,),
+)
+def sketch_update_signed_pallas(
+    plan: IndexPlan,
+    table: jax.Array,    # [w, h_pad] int32 or float32, h_pad % tile_h == 0
+    chunks: jax.Array,   # uint32[B, C]
+    freqs: jax.Array,    # int32[B] or float32[B], signed
+    q: jax.Array,        # uint32[w, C]
+    r: jax.Array,        # uint32[w, m]
+    sq: jax.Array,       # uint32[w, C]   sign-hash multipliers
+    sr: jax.Array,       # uint32[w, m]   sign-hash offsets
+    *,
+    tile_h: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Signed (Count-Sketch) fold: cell += sign(row, item) * f.
+
+    Same donation contract as :func:`sketch_update_pallas`; freqs may be
+    negative (turnstile).  Bit-exact vs core.countsketch.update on int32
+    tables for |f| < 2^24."""
+    w, h_pad = table.shape
+    if h_pad % tile_h:
+        raise ValueError(f"padded table width {h_pad} not a multiple of {tile_h}")
+    n_tiles = h_pad // tile_h
+    b, c = chunks.shape
+    grid = (w, n_tiles)
+
+    chunk_spec = pl.BlockSpec((b, c), lambda k, t: (0, 0))
+    f_spec = pl.BlockSpec((b,), lambda k, t: (0,))
+    q_spec = pl.BlockSpec((1, c), lambda k, t: (k, 0))
+    r_spec = pl.BlockSpec((1, r.shape[1]), lambda k, t: (k, 0))
+    tbl_spec = pl.BlockSpec((1, tile_h), lambda k, t: (k, t))
+
+    if jnp.issubdtype(table.dtype, jnp.integer):
+        fi = freqs.astype(jnp.int32)
+        flo = (fi & _LIMB_MASK).astype(jnp.float32)
+        fhi = (fi >> _LIMB_BITS).astype(jnp.float32)   # arithmetic shift
+        kernel = functools.partial(_update_kernel_signed_int, plan, tile_h)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[chunk_spec, f_spec, f_spec, q_spec, r_spec,
+                      q_spec, r_spec, tbl_spec],
+            out_specs=tbl_spec,
+            out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+            input_output_aliases={7: 0},
+            interpret=interpret,
+        )(chunks, flo, fhi, q, r, sq, sr, table)
+    else:
+        kernel = functools.partial(_update_kernel_signed_f32, plan, tile_h)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[chunk_spec, f_spec, q_spec, r_spec,
+                      q_spec, r_spec, tbl_spec],
+            out_specs=tbl_spec,
+            out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+            input_output_aliases={6: 0},
+            interpret=interpret,
+        )(chunks, freqs.astype(table.dtype), q, r, sq, sr, table)

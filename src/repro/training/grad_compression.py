@@ -1,35 +1,53 @@
 """Sketch-based gradient compression with error feedback (beyond paper).
 
 SketchML/Sketched-SGD-style: instead of all-reducing N gradient values per
-leaf, each worker folds its gradient into a signed Count-Sketch (w x h table,
-core/countsketch.py) whose *index keys are modular*: a weight coordinate is
-the ordered pair (row, col) of its matrix -- exactly the composite-key
-setting of the paper, so the table indexing reuses the MOD composite-hash
-machinery (ranges split per Thm 3 intuition: skew between fan-in and fan-out
-marginals).  Tables are linear => the DP all-reduce of tables equals the
-sketch of the all-reduced gradient.  Decompression dequeries every
-coordinate and keeps the top-k heavy hitters; the compression error goes
-into an error-feedback residual re-injected next step (EF-SGD).
+leaf, each worker folds its gradient into a *hierarchical* signed
+Count-Sketch (core/countsketch.py) whose index keys are modular: a weight
+coordinate is the ordered pair (row, col) of its matrix -- exactly the
+composite-key setting of the paper, so the table indexing reuses the MOD
+composite-hash machinery (ranges split per Thm 3 intuition: skew between
+fan-in and fan-out marginals).  Tables are linear => the DP all-reduce of
+tables equals the sketch of the all-reduced gradient, so with
+``axis_name`` set the tables (not the gradients) are what cross the DP
+axis.
+
+Decompression is a *descent*, not a dense dequery: level 0 of the
+hierarchy estimates every ROW-prefix's signed mass, a beam of the
+heaviest rows survives, and only the [beam, cols] candidate grid of the
+finest level is dequeried before an exact top-k.  For k << rows this never
+materializes the [w, N] estimate tensor the old path built.  The sketch
+only finds WHERE the heavy coordinates are (Sketched-SGD two-round
+practice); their VALUES travel in a second exact exchange of k (index,
+value) pairs -- raw median values at compression density carry false heavy
+hitters whose wrong-value subtraction compounds in the EF residual
+(measured: divergence); with exact second-round values a false positive
+merely spends one of the k slots.  The compression error goes into an
+error-feedback residual re-injected next step (EF-SGD).
 
 Contract: effective for *heavy-tailed* gradients (the empirically typical
 case, and the regime Sketched-SGD analyzes).  A dense isotropic gradient
 carries N independent values and cannot be represented in w*h < N cells --
 EF then only bounds, not shrinks, the residual.
 
-Compression ratio per leaf = N / (w*h).  Leaves below ``min_size`` are sent
-uncompressed (bias/norm vectors are tiny and precision-critical).
+Comm bytes per leaf = f32 tables of every level (all-reduced) + 8k for the
+second round; :func:`compression_ratio` reports exactly that against the
+leaf's own dtype.  Leaves below ``min_size`` are sent uncompressed (bias /
+norm vectors are tiny and precision-critical).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Tuple
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import countsketch as cs
+from repro.core import hierarchy as hh
 from repro.core import sketch as sk
 from repro.core.hashing import KeySchema
+from repro.kernels.hier_query import hier_candidate_query_signed_ref
 
 PyTree = Any
 
@@ -38,58 +56,199 @@ PyTree = Any
 class CompressionConfig:
     enabled: bool = False
     width: int = 3            # sketch rows (median estimator)
-    ratio: float = 16.0       # target N / (w*h) compression
+    ratio: float = 16.0       # target N / (w*h) cell compression
     min_size: int = 1 << 14   # leaves smaller than this pass through
     beta_rows_cols: float = 1.0  # MOD range split ratio between (row, col)
+    k: Optional[int] = None   # heavy coords kept per leaf (None: h // 4)
+    beam_factor: int = 2      # descent keeps min(rows, beam_factor * k) rows
+    axis_name: Optional[str] = None  # DP axis: all-reduce TABLES, not grads
+
+
+def _leaf_dims(shape: Tuple[int, ...]) -> Tuple[int, int]:
+    """(rows, cols) of a leaf flattened to 2D: all-but-last x last axis."""
+    rows = math.prod(shape[:-1]) if len(shape) > 1 else 1
+    cols = int(shape[-1])
+    return rows, cols
 
 
 def _leaf_schema(shape: Tuple[int, ...]) -> KeySchema:
-    """Coordinates of a >=2D leaf as a modularity-2 (row, col) key."""
-    rows = int(jnp.prod(jnp.array(shape[:-1]))) if len(shape) > 1 else 1
-    cols = int(shape[-1])
+    """Coordinates of a leaf as a modularity-2 (row, col) key."""
+    rows, cols = _leaf_dims(shape)
     return KeySchema(domains=(max(2, rows), max(2, cols)))
 
 
 def _leaf_spec(cfg: CompressionConfig, shape: Tuple[int, ...]) -> sk.SketchSpec:
-    n = int(jnp.prod(jnp.array(shape)))
+    """Per-leaf finest-level spec with ``prod(ranges) <= h`` GUARANTEED.
+
+    Floor split (core.sketch.equal_ranges discipline): a is the floored
+    beta-weighted square root, b the floor of the remaining budget, so the
+    table never exceeds its byte allocation -- the old round()-based split
+    overshot the budget by up to ~2x for small h (e.g. h=65 -> 8*8=64 ok
+    but h=13 -> round(3.6)*round(3.6) = 16 > 13).  Ranges are additionally
+    clamped to the module domains: buckets beyond a domain's size can never
+    be hit and would silently dilute the real compression ratio.
+    """
+    rows, cols = _leaf_dims(shape)
+    n = rows * cols
     h = max(64, int(n / (cfg.ratio * cfg.width)))
-    schema = _leaf_schema(shape)
-    # MOD split of h between the (row, col) modules
-    a = max(2, int(round((h * cfg.beta_rows_cols) ** 0.5)))
-    b = max(2, int(round(h / a)))
-    return sk.mod_sketch_spec(schema, [(0,), (1,)], (a, b), cfg.width)
+    a = int((h * cfg.beta_rows_cols) ** 0.5)
+    a = max(2, min(a, h // 2, max(2, rows)))
+    b = max(2, min(h // a, max(2, cols)))
+    return sk.mod_sketch_spec(_leaf_schema(shape), [(0,), (1,)], (a, b),
+                              cfg.width)
 
 
 def _coords(shape: Tuple[int, ...]) -> jax.Array:
     """uint32[N, 2] (row, col) coordinates for a leaf."""
-    rows = int(jnp.prod(jnp.array(shape[:-1]))) if len(shape) > 1 else 1
-    cols = int(shape[-1])
+    rows, cols = _leaf_dims(shape)
     r = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0).reshape(-1)
     c = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1).reshape(-1)
     return jnp.stack([r, c], axis=-1)
 
 
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """Static (hashable) per-leaf geometry, frozen at init so the compress
+    path traces with the plan as pytree aux data -- no host-side spec
+    rebuild per call."""
+    hspec: hh.HierarchySpec
+    shape: Tuple[int, ...]
+    rows: int
+    cols: int
+    k: int                    # exact number of coordinates kept
+    beam: int                 # rows surviving the level-0 descent
+
+
+def _leaf_plan(cfg: CompressionConfig, shape: Tuple[int, ...]) -> LeafPlan:
+    spec = _leaf_spec(cfg, shape)
+    rows, cols = _leaf_dims(shape)
+    k = spec.table_size // 4 if cfg.k is None else int(cfg.k)
+    k = max(1, min(k, rows * cols))
+    # k heavy coords occupy at most k distinct rows, so a beam of
+    # beam_factor * k rows keeps every heavy row -- PROVIDED level 0 can
+    # rank rows at all.  When the row range is narrower than the row
+    # domain (ranges[0] < rows), several rows share every level-0 cell and
+    # inherit each other's magnitude, so a beam would drop true heavy rows
+    # near-uniformly (measured); the plan then falls back to beam == rows
+    # (the full grid -- the pre-descent dense behavior, no false
+    # negatives).  Row-resolving level-0 tables come from the budget/
+    # beta_rows_cols split in :func:`_leaf_spec`.
+    if spec.ranges[0] >= rows and k < rows:
+        beam = max(1, min(rows, cfg.beam_factor * k))
+    else:
+        beam = rows
+    return LeafPlan(hspec=hh.HierarchySpec.from_spec(spec),
+                    shape=tuple(int(s) for s in shape),
+                    rows=rows, cols=cols, k=k, beam=beam)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LeafCompressor:
+    """One leaf's frozen plan + hash draw + precomputed coordinate keys.
+
+    A pytree node: (params, coords) are children (traced through jit /
+    carried in the train-state dict), the plan is static aux data, so
+    ``compress_decompress`` is jittable with the state as an argument."""
+    plan: LeafPlan
+    params: cs.CountSketchParams
+    coords: jax.Array         # uint32[N, 2]
+
+    def tree_flatten(self):
+        return (self.params, self.coords), self.plan
+
+    @classmethod
+    def tree_unflatten(cls, plan, children):
+        params, coords = children
+        return cls(plan, params, coords)
+
+
 class CompressionState(NamedTuple):
-    residual: PyTree          # error-feedback memory
-    cs_states: PyTree         # per-leaf CountSketchState (params fixed)
+    residual: PyTree          # error-feedback memory (None for passthrough)
+    compressors: PyTree       # per-leaf LeafCompressor (None for passthrough)
 
 
 def init_compression(cfg: CompressionConfig, params: PyTree,
                      key: jax.Array) -> CompressionState:
     leaves, treedef = jax.tree.flatten(params)
-    residual = [jnp.zeros(p.shape, jnp.float32) if p.size >= cfg.min_size else None
-                for p in leaves]
-    states = []
+    residual, comps = [], []
     for i, p in enumerate(leaves):
         if p.size >= cfg.min_size:
-            spec = _leaf_spec(cfg, p.shape)
-            states.append(cs.init_state(spec, jax.random.fold_in(key, i)))
+            plan = _leaf_plan(cfg, p.shape)
+            cparams = cs.init_params(plan.hspec.levels[-1],
+                                     jax.random.fold_in(key, i))
+            residual.append(jnp.zeros(p.shape, jnp.float32))
+            comps.append(LeafCompressor(plan, cparams, _coords(p.shape)))
         else:
-            states.append(None)
+            residual.append(None)
+            comps.append(None)
     return CompressionState(
         residual=jax.tree.unflatten(treedef, residual),
-        cs_states=jax.tree.unflatten(treedef, states),
+        compressors=jax.tree.unflatten(treedef, comps),
     )
+
+
+def _descend_topk(plan: LeafPlan, params: cs.CountSketchParams,
+                  tables: Tuple[jax.Array, ...]) -> jax.Array:
+    """Exact-k heavy-coordinate selection by hierarchy descent: int32[k]
+    flat (row * cols + col) indices.  Static shapes throughout (beam and k
+    are plan constants), so this traces under jit.
+
+    ``top_k`` returns k distinct positions, so exactly k coordinates come
+    back -- the old ``|est| >= thresh`` mask over-selected on ties (every
+    coordinate equal to the k-th magnitude survived, silently inflating
+    the second-round payload past its k-slot budget).
+    """
+    hspec = plan.hspec
+    hstate = cs.CountSketchHierarchy(params, tables)
+    if plan.beam >= plan.rows:
+        # Dense fallback (level 0 cannot rank rows, or k >= rows): the
+        # grid covers every row, so skip the level-0 query entirely.
+        top_rows = jnp.arange(plan.rows, dtype=jnp.uint32)
+    else:
+        row_ids = jnp.arange(plan.rows, dtype=jnp.uint32)[:, None]
+        row_est = cs.hier_query(hspec, hstate, 0, row_ids)        # [rows]
+        top_rows = jax.lax.top_k(jnp.abs(row_est), plan.beam)[1]
+        top_rows = top_rows.astype(jnp.uint32)
+
+    col_ids = jnp.arange(plan.cols, dtype=jnp.uint32)[:, None]
+    pp, cp, sp, sc = cs.candidate_signed_partials(
+        hspec, params, 1, top_rows[:, None], col_ids)
+    per_row = hier_candidate_query_signed_ref(tables[1], pp, cp, sp, sc)
+    grid = jnp.median(per_row, axis=0)                        # [beam, cols]
+
+    flat = jax.lax.top_k(jnp.abs(grid).reshape(-1), plan.k)[1]    # [k]
+    bi = flat // plan.cols
+    ci = flat % plan.cols
+    sel_rows = top_rows[bi].astype(jnp.int32)
+    return sel_rows * plan.cols + ci.astype(jnp.int32)
+
+
+def _compress_leaf(cfg: CompressionConfig, comp: LeafCompressor,
+                   g: jax.Array, r: jax.Array):
+    """One leaf's sketch -> (DP table reduce) -> descent -> exact values."""
+    plan = comp.plan
+    corrected = g.astype(jnp.float32) + r
+    vals = corrected.reshape(-1)
+    tables = tuple(jnp.zeros((s.width, s.table_size), jnp.float32)
+                   for s in plan.hspec.levels)
+    tables = cs.hier_fold_tables(plan.hspec, comp.params, tables,
+                                 comp.coords, vals)
+    if cfg.axis_name is not None:
+        # linearity: pmean of shard tables == table of the mean gradient,
+        # so every worker descends the SAME merged sketch and selects the
+        # same k coordinates -- the all-reduce ships w * sum_L h_L cells
+        # instead of N gradient values.
+        tables = tuple(jax.lax.pmean(t, cfg.axis_name) for t in tables)
+    coord_flat = _descend_topk(plan, comp.params, tables)
+    sel = vals[coord_flat]
+    if cfg.axis_name is not None:
+        # second round: k exact local values -> mean (coordinates agree
+        # across workers, so this is the exact mean-gradient value).
+        sel = jax.lax.pmean(sel, cfg.axis_name)
+    dense = jnp.zeros_like(vals).at[coord_flat].set(sel).reshape(g.shape)
+    new_r = corrected - dense
+    return dense, new_r
 
 
 def compress_decompress(
@@ -97,67 +256,62 @@ def compress_decompress(
     grads: PyTree,
     state: CompressionState,
 ) -> Tuple[PyTree, CompressionState, Dict[str, jax.Array]]:
-    """grad -> sketch -> estimate, with error feedback.
+    """grad -> sketch -> descent top-k -> exact values, with error feedback.
 
-    Returns (decompressed grads, new state, metrics).  In the distributed
-    runtime the table (not the gradient) is what crosses the DP axes; by
-    linearity psum(table_i) == table(psum(grad_i)), so applying this per
-    worker before the grad all-reduce is exact w.r.t. the compression model.
+    Jittable: every leaf's spec/coords/descent geometry lives in the state
+    (frozen at :func:`init_compression`), so tracing never rebuilds specs.
+    With ``cfg.axis_name`` set (running under pmap/shard_map over that
+    axis) this performs the FULL cross-worker gradient reduction: sketch
+    tables and second-round values are pmean'd for compressed leaves and
+    passthrough leaves are pmean'd directly, so the caller must not
+    all-reduce the gradients again.
     """
     g_leaves, treedef = jax.tree.flatten(grads)
     r_leaves = treedef.flatten_up_to(state.residual)
-    s_leaves = treedef.flatten_up_to(state.cs_states)
+    c_leaves = treedef.flatten_up_to(state.compressors)
 
-    out_g, out_r, out_s = [], [], []
+    out_g, out_r = [], []
     sq_err = jnp.float32(0.0)
     sq_tot = jnp.float32(0.0)
-    for g, r, st in zip(g_leaves, r_leaves, s_leaves):
-        if st is None:
+    for g, r, comp in zip(g_leaves, r_leaves, c_leaves):
+        if comp is None:
+            if cfg.axis_name is not None:
+                g = jax.lax.pmean(g, cfg.axis_name)
             out_g.append(g)
             out_r.append(r)
-            out_s.append(st)
             continue
-        spec = _leaf_spec(cfg, g.shape)
-        corrected = g.astype(jnp.float32) + r
-        items = _coords(g.shape)
-        vals = corrected.reshape(-1)
-        st_new = cs.update(spec, st._replace(table=jnp.zeros_like(st.table)),
-                           items, vals)
-        rows, est = cs.query_rows(spec, st_new, items)
-        # Two-round protocol (Sketched-SGD practice): the sketch finds
-        # WHERE the heavy coordinates are (top-k of the dequeried medians);
-        # their VALUES travel in a second exact exchange of k (index, value)
-        # pairs.  Raw median values at compression density carry false
-        # heavy hitters whose wrong-value subtraction compounds in the EF
-        # residual (measured: divergence); with exact second-round values a
-        # false positive merely spends one of the k slots.  Comm cost per
-        # leaf = w*h table (all-reduced) + 2k words.
-        k = max(1, spec.table_size // 4)
-        thresh = jax.lax.top_k(jnp.abs(est), k)[0][-1]
-        selected = jnp.abs(est) >= thresh
-        est = jnp.where(selected, vals, 0.0).reshape(g.shape)
-        new_r = corrected - est
+        dense, new_r = _compress_leaf(cfg, comp, g, r)
         sq_err = sq_err + jnp.sum(jnp.square(new_r))
-        sq_tot = sq_tot + jnp.sum(jnp.square(corrected))
-        out_g.append(est.astype(g.dtype))
+        sq_tot = sq_tot + jnp.sum(jnp.square(g.astype(jnp.float32) + r))
+        out_g.append(dense.astype(g.dtype))
         out_r.append(new_r)
-        out_s.append(st_new)
 
     metrics = {"compress_rel_err": jnp.sqrt(sq_err / (sq_tot + 1e-12))}
     return (
         jax.tree.unflatten(treedef, out_g),
         CompressionState(residual=jax.tree.unflatten(treedef, out_r),
-                         cs_states=jax.tree.unflatten(treedef, out_s)),
+                         compressors=state.compressors),
         metrics,
     )
 
 
 def compression_ratio(cfg: CompressionConfig, params: PyTree) -> float:
-    """Achieved bytes(grads) / bytes(tables) over compressed leaves."""
-    n_grad = n_table = 0
+    """Achieved comm-bytes ratio over compressed leaves.
+
+    Numerator: the bytes a plain all-reduce would ship (leaf size x the
+    leaf's own dtype width).  Denominator: what this module actually ships
+    -- float32 tables of EVERY hierarchy level (the descent needs the
+    coarse tables too, and coarse signs are not derivable from the finest
+    table) plus the 8k-byte second round (k int32 indices + k float32
+    values).  The old element-count ratio ignored dtypes and both
+    overheads, overstating the win.
+    """
+    raw = comp = 0
     for p in jax.tree.leaves(params):
         if p.size >= cfg.min_size:
-            spec = _leaf_spec(cfg, p.shape)
-            n_grad += p.size
-            n_table += spec.width * spec.table_size
-    return n_grad / max(1, n_table)
+            plan = _leaf_plan(cfg, p.shape)
+            raw += p.size * p.dtype.itemsize
+            comp += 4 * sum(s.width * s.table_size
+                            for s in plan.hspec.levels)
+            comp += 8 * plan.k
+    return raw / max(1, comp)

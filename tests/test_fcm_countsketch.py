@@ -111,3 +111,90 @@ def test_countsketch_unbiased_under_load():
         est = np.asarray(cs.query(spec, state, jnp.asarray(items[:500])))
         errs.append(np.mean(est - vals[:500]))
     assert abs(np.mean(errs)) < 0.1       # unbiased within noise
+
+
+def test_countsketch_linearity_and_merge():
+    """psum/merge semantics: table(A) + table(B) == table(A ++ B) exactly,
+    and turnstile deletions cancel (fold a stream, fold its negation,
+    recover zero)."""
+    from repro.core.hashing import KeySchema
+    schema = KeySchema(domains=(1 << 16, 1 << 16))
+    spec = sk.mod_sketch_spec(schema, [(0,), (1,)], (32, 32), 5)
+    params = cs.init_params(spec, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    items = rng.integers(0, 1 << 16, size=(800, 2),
+                         dtype=np.uint64).astype(np.uint32)
+    vals = rng.integers(-100, 100, size=800).astype(np.int32)
+
+    def fold(it, v):
+        st = cs.CountSketchState(
+            params, jnp.zeros((spec.width, spec.table_size), jnp.int32))
+        return cs.update(spec, st, jnp.asarray(it), jnp.asarray(v))
+
+    whole = fold(items, vals)
+    merged = cs.merge(fold(items[:300], vals[:300]),
+                      fold(items[300:], vals[300:]))
+    np.testing.assert_array_equal(np.asarray(whole.table),
+                                  np.asarray(merged.table))
+    cancelled = cs.merge(whole, fold(items, -vals))
+    assert not np.asarray(cancelled.table).any()
+
+
+def test_countsketch_l2estimate_bounds():
+    """AMS row norms: sqrt(median_k ||row_k||^2) tracks ||v||_2 within the
+    usual constant-probability multiplicative band."""
+    from repro.core.hashing import KeySchema
+    schema = KeySchema(domains=(1 << 16, 1 << 16))
+    spec = sk.mod_sketch_spec(schema, [(0,), (1,)], (32, 32), 7)
+    rng = np.random.default_rng(3)
+    items = rng.integers(0, 1 << 16, size=(4000, 2),
+                         dtype=np.uint64).astype(np.uint32)
+    items = np.unique(items, axis=0)
+    vals = rng.standard_normal(len(items)).astype(np.float32)
+    true_l2 = float(np.linalg.norm(vals))
+    within = 0
+    for trial in range(5):
+        state = cs.init_state(spec, jax.random.PRNGKey(100 + trial))
+        state = cs.update(spec, state, jnp.asarray(items), jnp.asarray(vals))
+        est = float(cs.l2estimate(state.table))
+        if 0.7 * true_l2 <= est <= 1.4 * true_l2:
+            within += 1
+    assert within >= 4, within
+
+
+def test_countsketch_hier_descent_no_false_negatives():
+    """Median threshold descent: every planted heavy key whose |value|
+    clears 2x the threshold is returned, at every level of the cascade
+    (coarse-level pruning must not drop a heavy child)."""
+    from repro.core.hashing import KeySchema
+    from repro.core.hierarchy import HierarchySpec
+    schema = KeySchema(domains=(1 << 16, 1 << 16))
+    spec = sk.mod_sketch_spec(schema, [(0,), (1,)], (64, 64), 5)
+    hspec = HierarchySpec.from_spec(spec)
+    rng = np.random.default_rng(4)
+    noise_items = rng.integers(0, 1 << 16, size=(3000, 2),
+                               dtype=np.uint64).astype(np.uint32)
+    noise_vals = rng.standard_normal(3000).astype(np.float32)
+    heavy_items = np.unique(
+        rng.integers(0, 1 << 16, size=(12, 2),
+                     dtype=np.uint64).astype(np.uint32), axis=0)
+    heavy_vals = np.where(np.arange(len(heavy_items)) % 2 == 0,
+                          50.0, -50.0).astype(np.float32)
+
+    hier = cs.init_hierarchy(hspec, jax.random.PRNGKey(5))
+    hier = cs.hier_update(hspec, hier, jnp.asarray(noise_items),
+                          jnp.asarray(noise_vals))
+    hier = cs.hier_update(hspec, hier, jnp.asarray(heavy_items),
+                          jnp.asarray(heavy_vals))
+
+    all_items = np.concatenate([noise_items, heavy_items])
+    cands = [np.unique(all_items[:, :1], axis=0),
+             np.unique(all_items[:, 1:], axis=0)]
+    found, est = cs.find_heavy_hitters(hspec, hier, 25.0, cands)
+    fs = {tuple(x) for x in found}
+    for it, v in zip(heavy_items, heavy_vals):
+        assert tuple(it) in fs, (it, v)
+    # signed estimates at the found heavy keys carry the right sign
+    lookup = {tuple(i): e for i, e in zip(map(tuple, found), est)}
+    for it, v in zip(heavy_items, heavy_vals):
+        assert np.sign(lookup[tuple(it)]) == np.sign(v)

@@ -244,3 +244,194 @@ def test_microbatching_matches_single_batch_loss():
     _, m1 = tl.make_train_step(cfg, base)(state0, batch)
     _, m2 = tl.make_train_step(cfg, micro)(state0, batch)
     assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=5e-3)
+
+
+# --------------------------------------------------------------------------
+# gradient compression: budget, exact-k, jittability, descent, DP
+# --------------------------------------------------------------------------
+
+def test_compression_budget_never_exceeded():
+    """Regression grid for the floor split: prod(ranges) <= h for every
+    (shape, ratio, width, beta) combination.  The old round()-based split
+    overshot the cell budget by up to ~2x for small tables, silently
+    reporting a better compression ratio than it delivered."""
+    import itertools
+    from repro.training.grad_compression import _leaf_spec
+
+    grid = itertools.product(
+        [(32, 32), (128, 64), (7, 13), (4096,), (3, 5, 64), (2, 100_000)],
+        [2.0, 8.0, 64.0],
+        [1, 3, 5],
+        [0.25, 1.0, 4.0],
+    )
+    for shape, ratio, width, beta in grid:
+        cfg = CompressionConfig(ratio=ratio, width=width,
+                                beta_rows_cols=beta)
+        spec = _leaf_spec(cfg, shape)
+        n = int(np.prod(shape))
+        h = max(64, int(n / (ratio * width)))
+        assert int(np.prod(spec.ranges)) <= h, \
+            (shape, ratio, width, beta, spec.ranges, h)
+        assert all(r >= 2 for r in spec.ranges)
+
+
+def test_compression_selects_exactly_k():
+    """Tie-heavy gradient: dozens of coordinates share the k-th magnitude.
+    top_k index selection must return exactly plan.k coordinates -- the old
+    ``|est| >= thresh`` mask shipped every tied coordinate, blowing the
+    second-round budget."""
+    from repro.training import grad_compression as gc
+
+    cfg = CompressionConfig(enabled=True, width=5, ratio=4.0, min_size=256,
+                            k=8)
+    g_np = np.zeros((32, 32), np.float32)
+    g_np.reshape(-1)[:64] = 3.0          # 64-way tie, k = 8
+    g = {"w": jnp.asarray(g_np)}
+    state = init_compression(cfg, g, jax.random.PRNGKey(0))
+    comp = state.compressors["w"]
+    assert comp.plan.k == 8
+    est, state, _ = compress_decompress(cfg, g, state)
+    nnz = int(np.sum(np.asarray(est["w"]) != 0))
+    assert nnz == 8, nnz
+    # shipped values are the exact gradient entries (second round)
+    sent = np.asarray(est["w"]).reshape(-1)
+    np.testing.assert_array_equal(np.unique(sent[sent != 0]), [3.0])
+
+
+def test_compression_jittable_with_cached_state():
+    """compress_decompress traces under jit with the state as a pytree
+    argument: specs/coords/descent geometry are frozen in the state at
+    init (LeafCompressor aux data), not rebuilt per call."""
+    cfg = CompressionConfig(enabled=True, width=3, ratio=4.0, min_size=256)
+    rng = np.random.default_rng(7)
+    g = {"w": jnp.asarray(rng.standard_normal((32, 32)).astype(np.float32))}
+    state = init_compression(cfg, g, jax.random.PRNGKey(1))
+    jitted = jax.jit(compress_decompress, static_argnums=0)
+    est_j, state_j, met_j = jitted(cfg, g, state)
+    est_e, state_e, met_e = compress_decompress(cfg, g, state)
+    np.testing.assert_allclose(np.asarray(est_j["w"]),
+                               np.asarray(est_e["w"]))
+    np.testing.assert_allclose(np.asarray(state_j.residual["w"]),
+                               np.asarray(state_e.residual["w"]))
+    # second call hits the jit cache (same treedef/aux): no retrace error
+    jitted(cfg, est_j, state_j)
+
+
+def test_compression_descent_matches_dense_dequery():
+    """Beam descent (k << rows) finds the same above-noise-floor top-k
+    coordinates as an exhaustive dense dequery of every coordinate.
+
+    Uses a row-resolving split (beta_rows_cols skews the budget until
+    ranges[0] == rows): that is the regime where _leaf_plan enables row
+    pruning.  Tail slots at the noise floor may differ -- descent only
+    scans beam rows, so which near-zero coordinate fills the last slots
+    is arbitrary in both paths -- but every estimate above half the
+    planted magnitude must be selected identically.
+    """
+    from repro.core import countsketch as cs
+    from repro.training import grad_compression as gc
+
+    cfg = CompressionConfig(enabled=True, width=5, ratio=2.0, min_size=256,
+                            beta_rows_cols=256.0, k=24)
+    rows, cols = 1024, 64
+    rng = np.random.default_rng(8)
+    g_np = rng.standard_normal((rows, cols)).astype(np.float32) * 0.01
+    hot_rows = rng.choice(rows, 12, replace=False)
+    hot_cols = rng.integers(0, cols, 12)
+    hot = hot_rows * cols + hot_cols
+    g_np.reshape(-1)[hot] += rng.choice([-8.0, 8.0], 12).astype(np.float32)
+    g = {"w": jnp.asarray(g_np)}
+    state = init_compression(cfg, g, jax.random.PRNGKey(2))
+    comp = state.compressors["w"]
+    plan = comp.plan
+    assert plan.hspec.levels[-1].ranges[0] == rows  # row-resolving level 0
+    assert plan.beam < plan.rows                    # actually pruning rows
+
+    vals = jnp.asarray(g_np.reshape(-1))
+    tables = tuple(jnp.zeros((s.width, s.table_size), jnp.float32)
+                   for s in plan.hspec.levels)
+    tables = cs.hier_fold_tables(plan.hspec, comp.params, tables,
+                                 comp.coords, vals)
+    descent = set(np.asarray(
+        gc._descend_topk(plan, comp.params, tables)).tolist())
+
+    hstate = cs.CountSketchHierarchy(comp.params, tables)
+    dense = np.asarray(cs.hier_query(plan.hspec, hstate, 1, comp.coords))
+    dense_top = set(np.argsort(-np.abs(dense))[: plan.k].tolist())
+    floor = 4.0   # half the planted magnitude: separates heavy from noise
+    assert {c for c in descent if abs(dense[c]) > floor} == \
+           {c for c in dense_top if abs(dense[c]) > floor}
+    assert set(hot.tolist()) <= descent   # every heavy coordinate found
+    assert set(hot.tolist()) <= dense_top
+
+
+def test_compression_bytes_ratio_accounting():
+    """compression_ratio reports BYTES shipped: f32 tables of every level
+    + the 8k-byte second round, against the leaf's own dtype."""
+    from repro.training.grad_compression import _leaf_plan
+
+    cfg = CompressionConfig(enabled=True, width=3, ratio=8.0, min_size=256)
+    params = {"w": jnp.zeros((64, 64)), "b": jnp.zeros((8,))}
+    plan = _leaf_plan(cfg, (64, 64))
+    table_bytes = 4 * sum(s.width * s.table_size
+                          for s in plan.hspec.levels)
+    expect = (64 * 64 * 4) / (table_bytes + 8 * plan.k)
+    assert compression_ratio(cfg, params) == pytest.approx(expect)
+    # bf16 leaves ship half the raw bytes -> half the ratio
+    params16 = {"w": jnp.zeros((64, 64), jnp.bfloat16)}
+    assert compression_ratio(cfg, params16) == pytest.approx(expect / 2)
+
+
+def test_compression_dp_tables_allreduce():
+    """2-device pmap with axis_name: tables (not gradients) cross the DP
+    axis; replicas stay bit-identical and identical per-device batches
+    reproduce the single-device result."""
+    import subprocess, sys, textwrap
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.training import grad_compression as gc
+
+        cfg1 = gc.CompressionConfig(enabled=True, width=5, ratio=4.0,
+                                    min_size=256)
+        cfg2 = gc.CompressionConfig(enabled=True, width=5, ratio=4.0,
+                                    min_size=256, axis_name="dp")
+        rng = np.random.default_rng(0)
+        g_np = rng.standard_normal((32, 32)).astype(np.float32)
+        grads = {"w": jnp.asarray(g_np), "b": jnp.asarray(
+            rng.standard_normal(8).astype(np.float32))}
+        state = gc.init_compression(cfg1, grads, jax.random.PRNGKey(0))
+
+        out1, st1, _ = gc.compress_decompress(cfg1, grads, state)
+
+        step = jax.pmap(lambda g, s: gc.compress_decompress(cfg2, g, s),
+                        axis_name="dp")
+        g2 = jax.tree.map(lambda x: jnp.stack([x, x]), grads)
+        s2 = jax.tree.map(lambda x: jnp.stack([x, x]), state)
+        out2, st2, _ = step(g2, s2)
+
+        w = np.asarray(out2["w"])
+        assert np.array_equal(w[0], w[1]), "replicas diverged"
+        np.testing.assert_allclose(w[0], np.asarray(out1["w"]),
+                                   rtol=1e-6, atol=1e-6)
+        # passthrough leaves are pmean'd too
+        b = np.asarray(out2["b"])
+        np.testing.assert_allclose(b[0], np.asarray(grads["b"]),
+                                   rtol=1e-6)
+        # different per-device grads: selection still agrees (merged
+        # tables are identical), replicas remain bit-identical
+        gA = jax.tree.map(
+            lambda x: jnp.stack([x, jnp.zeros_like(x)]), grads)
+        outA, stA, _ = step(gA, s2)
+        wA = np.asarray(outA["w"])
+        assert np.array_equal(wA[0], wA[1]), "replicas diverged (mixed)"
+        print("DP OK")
+    """
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"stderr:\\n{out.stderr[-4000:]}"
+    assert "DP OK" in out.stdout
