@@ -28,13 +28,13 @@ def main() -> None:
 
     from benchmarks import bounds_check, common, grad_compression_bench, \
         hierarchy_ingest_bench, kernel_microbench, migrate_bench, \
-        paper_figs, roofline_report, serve_bench, sharded_topk_bench, \
-        window_bench
+        paper_figs, recovery_bench, roofline_report, serve_bench, \
+        sharded_topk_bench, window_bench
     benches = (paper_figs.ALL + bounds_check.ALL + kernel_microbench.ALL
                + roofline_report.ALL + sharded_topk_bench.ALL
                + hierarchy_ingest_bench.ALL + window_bench.ALL
                + migrate_bench.ALL + serve_bench.ALL
-               + grad_compression_bench.ALL)
+               + grad_compression_bench.ALL + recovery_bench.ALL)
     print("name,us_per_call,derived")
     t_start = time.time()
     failures = []

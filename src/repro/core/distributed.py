@@ -321,6 +321,24 @@ def merge_local_hierarchy(
     return tuple(merge_local_tables(mesh, data_axes, t) for t in local_tables)
 
 
+def init_local_tables(
+    mesh: Mesh, data_axes: Tuple[str, ...],
+    n_shards: int, level_shapes: Sequence[Tuple[int, ...]], dtype,
+) -> Tuple[jax.Array, ...]:
+    """Zeroed per-shard local table stacks, placed shard-per-device.
+
+    One ``[n_shards, w, h_level]`` stack per level, sharded on axis 0 over
+    the mesh's data axes (the layout ``lazy_hierarchy_update`` consumes).
+    Shared by the sharded service's constructor and its N->M ``remesh``,
+    so a re-meshed service's fresh locals land on the NEW devices instead
+    of wherever the old stack happened to live.
+    """
+    return tuple(
+        jax.device_put(jnp.zeros((n_shards,) + tuple(shape), dtype=dtype),
+                       NamedSharding(mesh, P(data_axes)))
+        for shape in level_shapes)
+
+
 def row_sharded_query(
     spec: sk.SketchSpec,
     mesh: Mesh,

@@ -104,6 +104,48 @@ class SpaceSaving:
     def counts(self) -> Dict[Row, float]:
         return dict(self._count)
 
+    # -- durable state (serving/recovery.py snapshot currency) --------------
+
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """The summary as three flat arrays: rows / counts / errs.
+
+        Row order is the dict's insertion order, which matters: the plain
+        endpoint feeds ``values()`` to the descent unsorted, so a restore
+        that permuted rows could permute top-k tie order.  ``load_state``
+        re-inserts in the same order, making the round trip bit-exact --
+        including all later evictions, which depend only on dict contents
+        and order."""
+        rows = self.values()
+        return {
+            "rows": rows,
+            "counts": np.asarray([self._count[tuple(r)] for r in rows.tolist()],
+                                 dtype=np.float64),
+            "errs": np.asarray([self._err[tuple(r)] for r in rows.tolist()],
+                               dtype=np.float64),
+        }
+
+    def load_state(self, rows: np.ndarray, counts: np.ndarray,
+                   errs: np.ndarray) -> None:
+        """Restore a summary saved by :meth:`state_dict` (same capacity/width).
+
+        Overwrites the current contents wholesale; the rebuilt heap is the
+        compacted form of the loaded counts, so eviction behaviour after a
+        restore is identical to the uninterrupted summary's."""
+        rows = np.asarray(rows, dtype=np.uint32)
+        if rows.ndim != 2 or rows.shape[1] != self.n_cols:
+            raise ValueError(f"rows must be [K, {self.n_cols}]")
+        if rows.shape[0] > self.capacity:
+            raise ValueError(
+                f"loaded summary has {rows.shape[0]} rows but capacity is "
+                f"{self.capacity}: capacity must match the saved summary")
+        counts = np.asarray(counts, dtype=np.float64)
+        errs = np.asarray(errs, dtype=np.float64)
+        self._count = {tuple(r): float(c)
+                       for r, c in zip(rows.tolist(), counts.tolist())}
+        self._err = {tuple(r): float(e)
+                     for r, e in zip(rows.tolist(), errs.tolist())}
+        self._compact_heap()
+
     @classmethod
     def fold(cls, summaries: List["SpaceSaving"]) -> "SpaceSaving":
         """Fold shard summaries into one fresh summary (cross-shard cascade).

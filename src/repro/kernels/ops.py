@@ -346,6 +346,56 @@ class KernelSketch:
         """Read-only unpadded table copy (inspection/tests; any mode)."""
         return np.asarray(self.table[:, : self.spec.table_size])
 
+    # -- durable state (serving/recovery.py snapshot currency) ---------------
+
+    def state_dict(self) -> dict:
+        """Full sketch state for ALL THREE modes as ``{key: ndarray}``.
+
+        Unlike :meth:`state` (the linear merge currency) this is the
+        *recovery* currency: the padded table plus every hash param the
+        mode uses (bucket q/r always, sign q/r when signed), so a restored
+        sketch is bit-identical regardless of linearity -- a conservative
+        table round-trips too, it just must be rebuilt by ordered WAL
+        replay rather than fold when the table itself is lost.
+        """
+        out = {
+            "meta.fingerprint": np.frombuffer(
+                (f"kernel|{self.spec!r}|mode={self.mode}"
+                 f"|dtype={self.table.dtype}|h_pad={self.h_pad}"
+                 ).encode(), dtype=np.uint8).copy(),
+            "table": np.asarray(self.table),
+            "params.q": np.asarray(self.params.q),
+            "params.r": np.asarray(self.params.r),
+        }
+        if self.mode == "signed":
+            out["params.sign_q"] = np.asarray(self.cs_params.sign_q)
+            out["params.sign_r"] = np.asarray(self.cs_params.sign_r)
+        return out
+
+    def load_state_dict(self, sd: dict) -> None:
+        """Restore state saved by :meth:`state_dict`; bit-exact round trip."""
+        fp = np.frombuffer(
+            (f"kernel|{self.spec!r}|mode={self.mode}"
+             f"|dtype={self.table.dtype}|h_pad={self.h_pad}").encode(),
+            dtype=np.uint8)
+        got = np.asarray(sd["meta.fingerprint"], dtype=np.uint8)
+        if not np.array_equal(fp, got):
+            raise ValueError(
+                "kernel state_dict fingerprint mismatch: saved "
+                f"{bytes(got).decode(errors='replace')!r}, this sketch is "
+                f"{bytes(fp).decode(errors='replace')!r}")
+        self.table = jnp.asarray(sd["table"])
+        params = sk.SketchParams(q=jnp.asarray(sd["params.q"]),
+                                 r=jnp.asarray(sd["params.r"]))
+        if self.mode == "signed":
+            self.cs_params = cskt.CountSketchParams(
+                base=params,
+                sign_q=jnp.asarray(sd["params.sign_q"]),
+                sign_r=jnp.asarray(sd["params.sign_r"]))
+            self.params = self.cs_params.base
+        else:
+            self.params = params
+
 
 class KernelHierarchy:
     """Hierarchy whose level tables live concatenated + padded for the fused

@@ -106,6 +106,17 @@ class MigratingSurface:
         self._migration = SpecMigration(
             self._build_successor(new_spec, key), warmup)
 
+    def abort_migration(self) -> None:
+        """Roll back an in-flight migration to the active surface.
+
+        Safe at any warmup point: double-write only ever writes the
+        *successor*, the active tables/pools/totals are untouched by the
+        migration machinery, so dropping the successor leaves no residue
+        -- queries before and after the abort are answered from the same
+        active state.  No-op when no migration is in flight (aborting
+        twice, or after cutover already happened, is not an error)."""
+        self._migration = None
+
     def _migration_tick(self, raw_items: np.ndarray,
                         raw_freqs: Optional[np.ndarray]) -> None:
         """Double-write one ingested block; cut over when warmup is done."""

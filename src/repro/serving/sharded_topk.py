@@ -48,7 +48,7 @@ from repro.core import distributed as dist
 from repro.core import hierarchy as hh
 from repro.core import sketch as sk
 from repro.core.summary import SpaceSaving
-from repro.serving.migration import MigratingSurface
+from repro.serving.migration import MigratingSurface, require_not_migrating
 
 
 def threshold_descent_topk(
@@ -144,15 +144,27 @@ class ShardedTopKService(MigratingSurface):
             SpaceSaving(self.max_candidates, len(g))
             for g in base_spec.partition
         ]
-        # jit wrappers cached per service: an eager shard_map re-traces on
-        # every call, which would dominate the ingest hot path.  Params are
-        # dynamic args (not closed over) so a promoted endpoint's params
-        # (to_sharded swaps self.merged) hit the same compiled executable.
-        # The local tables are DONATED: the per-shard fold (which now
-        # hashes each item once and cascades to every level inside one
-        # shard_map) accumulates in place instead of copying every level
-        # table per block.  ``ingest`` rebinds self._local to the result,
-        # which is the only live reference.
+        self._build_jit_wrappers()
+
+    def _build_jit_wrappers(self) -> None:
+        """(Re)build the jit-cached shard_map wrappers for the CURRENT mesh.
+
+        jit wrappers cached per service: an eager shard_map re-traces on
+        every call, which would dominate the ingest hot path.  Params are
+        dynamic args (not closed over) so a promoted endpoint's params
+        (to_sharded swaps self.merged) hit the same compiled executable.
+        The local tables are DONATED: the per-shard fold (which now
+        hashes each item once and cascades to every level inside one
+        shard_map) accumulates in place instead of copying every level
+        table per block.  ``ingest`` rebinds self._local to the result,
+        which is the only live reference.
+
+        The lambdas close over ``self.mesh``/``self.data_axes`` *at trace
+        time*, so anything that changes the mesh (``remesh``) MUST call
+        this again -- reusing the old function objects would silently
+        replay executables compiled for the old device set (the same
+        staleness hazard migration's ``_adopt`` documents).
+        """
         self._fold = jax.jit(
             lambda local, params, it, fr: dist.lazy_hierarchy_update(
                 self.hspec, self.mesh, self.data_axes, local, params,
@@ -260,6 +272,151 @@ class ShardedTopKService(MigratingSurface):
     def _ensure_synced(self) -> None:
         if self._dirty:
             self.sync()
+
+    # -- elastic N->M re-meshing --------------------------------------------
+
+    def remesh(self, new_mesh, *,
+               data_axes: Optional[Tuple[str, ...]] = None) -> None:
+        """Move this service onto a different mesh (grow or shrink), live.
+
+        Exact by linearity, no drain needed: ``sync()`` psum-merges every
+        survivor shard's local deltas into the replicated serving tables,
+        then the merged state is re-scattered onto the new mesh (via
+        training/fault_tolerance.elastic_remesh) with FRESH zero locals on
+        the new data axes -- merged-plus-zeros is the same sum as any
+        other split, so queries before and after the remesh are
+        bit-identical, at any N -> M.  Candidate pools fold into the new
+        shard 0 (exact union under capacity, the same argument as
+        ``to_sharded``); subsequent ingest fills all M shards' pools.
+
+        The jit-cached shard_map wrappers are REBUILT for the new mesh:
+        the old lambdas close over the old mesh at trace time, so reusing
+        them would silently replay executables compiled for the old
+        device set.
+
+        Refused mid-migration (the successor would need the same remesh).
+        """
+        from repro.launch.mesh import sketch_data_axes
+        from repro.training.fault_tolerance import elastic_remesh
+
+        require_not_migrating(self._migration, "ShardedTopKService.remesh")
+        self.sync()
+        if data_axes is None:
+            data_axes = sketch_data_axes(new_mesh)
+        data_axes = tuple(data_axes)
+        new_n = int(np.prod([new_mesh.shape[a] for a in data_axes],
+                            dtype=np.int64))
+        # fold every old shard's pools before the shard list is resized
+        folded = [SpaceSaving.fold([pools[j] for pools in self._shard_pools])
+                  for j in range(len(self._global_pools))]
+        self.mesh = new_mesh
+        self.data_axes = data_axes
+        self.n_shards = new_n
+        # merged tables + params are logically replicated; re-place them on
+        # the new device set so nothing still lives on a lost device
+        self.merged = elastic_remesh(self.merged, new_mesh, lambda x: dist.P())
+        self._local = dist.init_local_tables(
+            new_mesh, data_axes, new_n,
+            [st.table.shape for st in self.merged.states], self._dtype)
+        self._shard_pools = (
+            [folded]
+            + [[SpaceSaving(self.max_candidates, len(g))
+                for g in self.hspec.base.partition]
+               for _ in range(new_n - 1)])
+        self._pools_dirty = True
+        self._dirty = False
+        self._blocks_since_sync = 0
+        self._build_jit_wrappers()
+
+    # -- durable state (serving/recovery.py snapshot currency) ---------------
+
+    def _config_fingerprint(self) -> np.ndarray:
+        desc = (f"sharded|{self.hspec.base!r}|mode={self.mode}"
+                f"|dtype={jnp.dtype(self._dtype)}|cap={self.max_candidates}")
+        return np.frombuffer(desc.encode(), dtype=np.uint8).copy()
+
+    def state_dict(self) -> dict:
+        """Full service state as a flat ``{key: ndarray}`` mapping.
+
+        Syncs first, so the snapshot is the CANONICAL form -- merged
+        tables hold everything ingested, locals are zero.  The sync is
+        query-bit-neutral (any query would have forced the same psum), so
+        "snapshot then crash then restore" and "never crashed" agree
+        bitwise.  The fingerprint deliberately excludes the mesh/shard
+        count: a 4-shard snapshot restores into a 2-shard service (pools
+        fold into shard 0, same exactness argument as ``remesh``).
+        """
+        if self._migration is not None:
+            raise ValueError(
+                "cannot checkpoint a service mid-migration: the warmup "
+                "successor's state is transient; call abort_migration() to "
+                "roll back to the active surface (or wait for cutover), "
+                "then snapshot")
+        self.sync()
+        out = {
+            "meta.total": np.asarray(self.total, dtype=np.int64),
+            "meta.n_shards": np.asarray(self.n_shards, dtype=np.int64),
+            "meta.fingerprint": self._config_fingerprint(),
+            "params.q": np.asarray(self.merged.states[-1].params.q),
+            "params.r": np.asarray(self.merged.states[-1].params.r),
+        }
+        for i, st in enumerate(self.merged.states):
+            out[f"level{i}.table"] = np.asarray(st.table)
+        for s, pools in enumerate(self._shard_pools):
+            for j, p in enumerate(pools):
+                for k, v in p.state_dict().items():
+                    out[f"shard{s}.pool{j}.{k}"] = v
+        return out
+
+    def load_state_dict(self, sd: dict) -> None:
+        """Restore state saved by :meth:`state_dict`; bit-exact round trip.
+
+        When the saved shard count matches, every shard's pool is restored
+        in place; otherwise all saved pools fold into shard 0 (exact union
+        under capacity) -- either way the merged tables, totals, and query
+        output are bit-identical to the snapshotted service's.
+        """
+        fp = self._config_fingerprint()
+        got = np.asarray(sd["meta.fingerprint"], dtype=np.uint8)
+        if not np.array_equal(fp, got):
+            raise ValueError(
+                "sharded state_dict fingerprint mismatch: saved "
+                f"{bytes(got).decode(errors='replace')!r}, this service is "
+                f"{bytes(fp).decode(errors='replace')!r}")
+        base = sk.SketchParams(q=jnp.asarray(sd["params.q"]),
+                               r=jnp.asarray(sd["params.r"]))
+        self.merged = hh.HierarchyState(states=tuple(
+            sk.SketchState(params=hh.level_params(self.hspec, base, i),
+                           table=jnp.asarray(sd[f"level{i}.table"]))
+            for i in range(self.hspec.n_levels)))
+        self._local = tuple(jnp.zeros_like(t) for t in self._local)
+        self.total = int(sd["meta.total"])
+        self._dirty = False
+        self._blocks_since_sync = 0
+        saved_shards = int(sd["meta.n_shards"])
+
+        def load_pool(s: int, j: int) -> SpaceSaving:
+            p = SpaceSaving(self.max_candidates,
+                            len(self.hspec.base.partition[j]))
+            p.load_state(sd[f"shard{s}.pool{j}.rows"],
+                         sd[f"shard{s}.pool{j}.counts"],
+                         sd[f"shard{s}.pool{j}.errs"])
+            return p
+
+        n_groups = len(self.hspec.base.partition)
+        if saved_shards == self.n_shards:
+            self._shard_pools = [[load_pool(s, j) for j in range(n_groups)]
+                                 for s in range(saved_shards)]
+        else:
+            folded = [SpaceSaving.fold([load_pool(s, j)
+                                        for s in range(saved_shards)])
+                      for j in range(n_groups)]
+            self._shard_pools = (
+                [folded]
+                + [[SpaceSaving(self.max_candidates, len(g))
+                    for g in self.hspec.base.partition]
+                   for _ in range(self.n_shards - 1)])
+        self._pools_dirty = True
 
     # -- queries (descent against the merged level tables) ------------------
 

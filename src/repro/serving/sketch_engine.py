@@ -249,6 +249,74 @@ class SketchTopKEndpoint(MigratingSurface):
         """Per-group candidate value arrays from the space-saving pools."""
         return [p.values() for p in self._pools]
 
+    # -- durable state (serving/recovery.py snapshot currency) ----------------
+
+    def _config_fingerprint(self) -> np.ndarray:
+        dtype = self.state.states[0].table.dtype
+        desc = (f"endpoint|{self.hspec.base!r}|mode={self.mode}"
+                f"|dtype={dtype}|cap={self.max_candidates}")
+        return np.frombuffer(desc.encode(), dtype=np.uint8).copy()
+
+    def state_dict(self) -> "dict":
+        """Full endpoint state as a flat ``{key: ndarray}`` mapping.
+
+        Covers everything a bit-exact restore needs: every level table,
+        the shared hash params (the finest level's arrays -- every
+        coarser level's params are prefix slices of them), the stream
+        total, and each group's space-saving pool in insertion order.
+        A config fingerprint guards against restoring into an endpoint
+        built on a different spec/mode/dtype.
+
+        Refused mid-migration: the successor's tables are transient
+        double-write state with no stable identity to restore into --
+        call ``abort_migration()`` (or wait for cutover) first.
+        """
+        if self._migration is not None:
+            raise ValueError(
+                "cannot checkpoint an endpoint mid-migration: the warmup "
+                "successor's state is transient; call abort_migration() to "
+                "roll back to the active surface (or wait for cutover), "
+                "then snapshot")
+        state = self.state
+        out = {
+            "meta.total": np.asarray(self.total, dtype=np.int64),
+            "meta.fingerprint": self._config_fingerprint(),
+            # finest level's params ARE the full shared family; coarser
+            # levels' params are rebuilt as prefix slices on load
+            "params.q": np.asarray(state.states[-1].params.q),
+            "params.r": np.asarray(state.states[-1].params.r),
+        }
+        for i, st in enumerate(state.states):
+            out[f"level{i}.table"] = np.asarray(st.table)
+        for j, p in enumerate(self._pools):
+            for k, v in p.state_dict().items():
+                out[f"pool{j}.{k}"] = v
+        return out
+
+    def load_state_dict(self, sd: "dict") -> None:
+        """Restore state saved by :meth:`state_dict`; bit-exact round trip."""
+        from repro.core import sketch as sk
+
+        fp = self._config_fingerprint()
+        got = np.asarray(sd["meta.fingerprint"], dtype=np.uint8)
+        if not np.array_equal(fp, got):
+            raise ValueError(
+                "endpoint state_dict fingerprint mismatch: saved "
+                f"{bytes(got).decode(errors='replace')!r}, this endpoint is "
+                f"{bytes(fp).decode(errors='replace')!r}")
+        base = sk.SketchParams(q=jnp.asarray(sd["params.q"]),
+                               r=jnp.asarray(sd["params.r"]))
+        states = []
+        for i in range(self.hspec.n_levels):
+            params = self._hh.level_params(self.hspec, base, i)
+            states.append(sk.SketchState(
+                params=params, table=jnp.asarray(sd[f"level{i}.table"])))
+        self.state = self._hh.HierarchyState(states=tuple(states))
+        self.total = int(sd["meta.total"])
+        for j, p in enumerate(self._pools):
+            p.load_state(sd[f"pool{j}.rows"], sd[f"pool{j}.counts"],
+                         sd[f"pool{j}.errs"])
+
     # -- hot spec migration hooks (serving/migration.MigratingSurface) -------
 
     def _build_successor(self, new_spec, key) -> "SketchTopKEndpoint":
@@ -582,6 +650,27 @@ class SketchServeEngine:
         """Stream mass ingested since the serving snapshot was taken."""
         with self._lock:
             return self._mass - self._snap.mass if self._snap else self._mass
+
+    @property
+    def ingested_mass(self) -> int:
+        """The engine's cumulative-mass watermark (staleness clock)."""
+        with self._lock:
+            return self._mass
+
+    def restore_watermark(self, mass: int) -> None:
+        """Reset the staleness clock after a backend restore.
+
+        The recovery layer restores the backend's state out-of-band, so
+        the engine's cumulative-mass counter must be put back to the saved
+        watermark (otherwise staleness would measure against a counter
+        from a different life).  Retakes the snapshot so queries see the
+        restored tables immediately.
+        """
+        with self._lock:
+            self._staged = None             # staged indices from the old life
+            self._mass = int(mass)
+            self._blocks_since_psum = 0
+            self._snap = self._take_snapshot()
 
     def sync(self) -> SketchSnapshot:
         """Drain the pipeline, psum-merge (sharded), refresh the snapshot,

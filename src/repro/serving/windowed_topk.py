@@ -196,6 +196,82 @@ class WindowedTopKService:
             out.append(np.unique(vals, axis=0) if len(vals) else vals)
         return out
 
+    # -- durable state (serving/recovery.py snapshot currency) ---------------
+
+    def _config_fingerprint(self) -> np.ndarray:
+        dtype = self.wstate.ring[0][0].dtype
+        desc = (f"windowed|{self.wspec!r}|dtype={dtype}"
+                f"|cap={self.max_candidates}|inc={self.incremental}")
+        return np.frombuffer(desc.encode(), dtype=np.uint8).copy()
+
+    def state_dict(self) -> dict:
+        """Full windowed state as a flat ``{key: ndarray}`` mapping.
+
+        Every ring slot's tables, the retired accumulator, the shared hash
+        params (finest level's arrays), the epoch clock (head + epoch
+        counter), per-slot totals and pools, and -- on the incremental
+        path -- the running window sum, persisted rather than recomputed
+        so the round trip is bitwise-exact for any table dtype."""
+        out = {
+            "meta.fingerprint": self._config_fingerprint(),
+            "meta.head": np.asarray(self.wstate.head, dtype=np.int64),
+            "meta.epoch": np.asarray(self.wstate.epoch, dtype=np.int64),
+            "meta.epoch_totals": np.asarray(self._epoch_totals,
+                                            dtype=np.int64),
+            "meta.retired_total": np.asarray(self._retired_total,
+                                             dtype=np.int64),
+            "params.q": np.asarray(self.wstate.level_params[-1].q),
+            "params.r": np.asarray(self.wstate.level_params[-1].r),
+        }
+        for s, tables in enumerate(self.wstate.ring):
+            for l, t in enumerate(tables):
+                out[f"ring{s}.level{l}.table"] = np.asarray(t)
+        for l, t in enumerate(self.wstate.retired):
+            out[f"retired.level{l}.table"] = np.asarray(t)
+        if self._window_sum is not None:
+            for l, t in enumerate(self._window_sum):
+                out[f"wsum.level{l}.table"] = np.asarray(t)
+        for s, pools in enumerate(self._pools):
+            for j, p in enumerate(pools):
+                for k, v in p.state_dict().items():
+                    out[f"slot{s}.pool{j}.{k}"] = v
+        return out
+
+    def load_state_dict(self, sd: dict) -> None:
+        """Restore state saved by :meth:`state_dict`; bit-exact round trip."""
+        fp = self._config_fingerprint()
+        got = np.asarray(sd["meta.fingerprint"], dtype=np.uint8)
+        if not np.array_equal(fp, got):
+            raise ValueError(
+                "windowed state_dict fingerprint mismatch: saved "
+                f"{bytes(got).decode(errors='replace')!r}, this service is "
+                f"{bytes(fp).decode(errors='replace')!r}")
+        base = sk.SketchParams(q=jnp.asarray(sd["params.q"]),
+                               r=jnp.asarray(sd["params.r"]))
+        level_params = tuple(hh.level_params(self.hspec, base, i)
+                             for i in range(self.hspec.n_levels))
+        n_levels = self.hspec.n_levels
+        ring = tuple(
+            tuple(jnp.asarray(sd[f"ring{s}.level{l}.table"])
+                  for l in range(n_levels))
+            for s in range(self.wspec.n_epochs))
+        retired = tuple(jnp.asarray(sd[f"retired.level{l}.table"])
+                        for l in range(n_levels))
+        self.wstate = self.wstate._replace(
+            level_params=level_params, ring=ring, retired=retired,
+            head=int(sd["meta.head"]), epoch=int(sd["meta.epoch"]))
+        self._window_sum = (
+            tuple(jnp.asarray(sd[f"wsum.level{l}.table"])
+                  for l in range(n_levels))
+            if self.incremental else None)
+        self._epoch_totals = [int(x) for x in sd["meta.epoch_totals"]]
+        self._retired_total = int(sd["meta.retired_total"])
+        for s, pools in enumerate(self._pools):
+            for j, p in enumerate(pools):
+                p.load_state(sd[f"slot{s}.pool{j}.rows"],
+                             sd[f"slot{s}.pool{j}.counts"],
+                             sd[f"slot{s}.pool{j}.errs"])
+
     # -- queries ------------------------------------------------------------
 
     def heavy_hitters(self, threshold: int,

@@ -8,12 +8,20 @@ Layout (one directory per step)::
 
 Writes go to ``step_xxx.tmp`` and are renamed into place only after fsync --
 a crashed writer never corrupts the latest complete checkpoint, and restore
-always picks the newest *complete* step (manifest present).  ``AsyncWriter``
-moves serialization off the training thread (device->host copy happens at
-submit time, so the step buffer donation stays safe).  Multi-host: each
+always picks the newest *complete* step (manifest present).
+``AsyncCheckpointer`` moves serialization off the training thread
+(device->host copy happens at submit time, so the step buffer donation
+stays safe), surfaces worker failures on the next ``wait()``/``submit()``,
+and retries transient save failures with backoff.  Multi-host: each
 process writes its own addressable shards; restore re-assembles per process
 (single-process covers the CPU container; the naming scheme is already
 process-indexed).
+
+Manifests are versioned (``format_version: 2``) and carry a CRC32 per
+array, so a restore detects silent on-disk corruption
+(:class:`CheckpointCorruptionError`) instead of loading garbage tables —
+the serving recovery layer (serving/recovery.py) uses this to fall back to
+the previous snapshot.  Version-1 manifests (pre-CRC) still restore.
 """
 from __future__ import annotations
 
@@ -22,12 +30,23 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 PyTree = Any
+
+FORMAT_VERSION = 2
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A stored array failed its CRC32 check (or the archive is unreadable)."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def _flatten_with_paths(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
@@ -56,13 +75,15 @@ def save(
 
     proc = jax.process_index()
     manifest: Dict[str, Any] = {"step": step, "trees": {},
+                                "format_version": FORMAT_VERSION,
                                 "n_processes": jax.process_count(),
                                 "time": time.time()}
     arrays: Dict[str, np.ndarray] = {}
     for name, tree in trees.items():
         leaves = _flatten_with_paths(tree)
         manifest["trees"][name] = [
-            {"path": k, "shape": list(v.shape), "dtype": str(v.dtype)}
+            {"path": k, "shape": list(v.shape), "dtype": str(v.dtype),
+             "crc32": _crc(v)}
             for k, v in leaves
         ]
         for k, v in leaves:
@@ -97,12 +118,12 @@ def latest_step(directory: str) -> Optional[int]:
     return best
 
 
-def restore(
+def _load_step_arrays(
     directory: str,
-    templates: Dict[str, PyTree],
-    step: Optional[int] = None,
-) -> Tuple[int, Dict[str, PyTree]]:
-    """Restore trees shaped like ``templates`` from the newest (or given) step."""
+    step: Optional[int],
+    verify: bool,
+) -> Tuple[int, Dict[str, Any], Dict[str, np.ndarray]]:
+    """Load (step, manifest, {"name::path": array}) with optional CRC check."""
     step = latest_step(directory) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no complete checkpoint under {directory}")
@@ -110,8 +131,35 @@ def restore(
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     proc = jax.process_index()
-    data = np.load(os.path.join(path, f"proc{proc:02d}_shard000.npz"))
+    npz_path = os.path.join(path, f"proc{proc:02d}_shard000.npz")
+    try:
+        with np.load(npz_path) as data:
+            arrays = {k: data[k] for k in data.files}
+    except (OSError, ValueError, zlib.error) as e:
+        raise CheckpointCorruptionError(f"unreadable archive {npz_path}: {e}")
+    if verify and manifest.get("format_version", 1) >= 2:
+        for name, entries in manifest["trees"].items():
+            for e in entries:
+                key = f"{name}::{e['path']}"
+                if key not in arrays:
+                    raise CheckpointCorruptionError(
+                        f"step {step}: array {key} missing from archive")
+                got = _crc(arrays[key])
+                if got != e["crc32"]:
+                    raise CheckpointCorruptionError(
+                        f"step {step}: CRC mismatch for {key} "
+                        f"(stored {e['crc32']:#010x}, got {got:#010x})")
+    return manifest["step"], manifest, arrays
 
+
+def restore(
+    directory: str,
+    templates: Dict[str, PyTree],
+    step: Optional[int] = None,
+    verify: bool = True,
+) -> Tuple[int, Dict[str, PyTree]]:
+    """Restore trees shaped like ``templates`` from the newest (or given) step."""
+    step, manifest, data = _load_step_arrays(directory, step, verify)
     out: Dict[str, PyTree] = {}
     for name, template in templates.items():
         leaves, treedef = jax.tree_util.tree_flatten(template)
@@ -121,27 +169,78 @@ def restore(
                              f"template has {len(leaves)}")
         vals = [data[f"{name}::{p}"] for p in paths]
         out[name] = jax.tree_util.tree_unflatten(treedef, vals)
-    return manifest["step"], out
+    return step, out
 
 
-class AsyncWriter:
-    """Background checkpoint writer (one in flight; host copy at submit)."""
+def restore_trees(
+    directory: str,
+    step: Optional[int] = None,
+    verify: bool = True,
+) -> Tuple[int, Dict[str, Dict[str, np.ndarray]]]:
+    """Template-free restore: ``(step, {tree_name: {leaf_path: array}})``.
 
-    def __init__(self, directory: str, keep_last: int = 3):
+    Serving recovery can't always build a shaped template before reading
+    (e.g. the saved shard count decides how the backend is rebuilt), so
+    this returns the raw flat mapping in manifest order instead.
+    """
+    step, manifest, data = _load_step_arrays(directory, step, verify)
+    out: Dict[str, Dict[str, np.ndarray]] = {}
+    for name, entries in manifest["trees"].items():
+        out[name] = {e["path"]: data[f"{name}::{e['path']}"] for e in entries}
+    return step, out
+
+
+def list_steps(directory: str) -> List[int]:
+    """All complete checkpoint steps under ``directory``, ascending."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, d, "manifest.json")):
+                steps.append(int(d.split("_")[1]))
+    return sorted(steps)
+
+
+class AsyncCheckpointer:
+    """Background checkpoint writer (one in flight; host copy at submit).
+
+    ``submit`` first waits on the in-flight write, so a failed prior write
+    raises *there* rather than being dropped; ``wait`` re-raises the
+    worker's exception.  Transient save failures (OSError and friends) are
+    retried ``retries`` times with exponential backoff before giving up.
+    """
+
+    def __init__(self, directory: str, keep_last: int = 3,
+                 retries: int = 2, backoff: float = 0.05):
         self.directory = directory
         self.keep_last = keep_last
+        self.retries = int(retries)
+        self.backoff = float(backoff)
         self._thread: Optional[threading.Thread] = None
         self.last_error: Optional[Exception] = None
 
+    def _save_with_retry(self, step: int, trees: Dict[str, PyTree]) -> None:
+        # calls the module-global `save` each attempt so tests can
+        # monkeypatch in transient failures
+        for attempt in range(self.retries + 1):
+            try:
+                save(self.directory, step, trees, self.keep_last)
+                return
+            except Exception:
+                if attempt == self.retries:
+                    raise
+                time.sleep(self.backoff * (2 ** attempt))
+
     def submit(self, step: int, trees: Dict[str, PyTree]) -> None:
-        self.wait()
+        self.wait()  # raises if the previous write failed -- never dropped
         host_trees = {k: jax.tree.map(lambda x: np.asarray(x), t)
                       for k, t in trees.items()}
 
         def work():
             try:
-                save(self.directory, step, host_trees, self.keep_last)
-            except Exception as e:  # surfaced on next wait()
+                self._save_with_retry(step, host_trees)
+            except Exception as e:  # surfaced on next wait()/submit()
                 self.last_error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
@@ -154,3 +253,7 @@ class AsyncWriter:
         if self.last_error is not None:
             err, self.last_error = self.last_error, None
             raise err
+
+
+# Back-compat name (pre-recovery-layer callers).
+AsyncWriter = AsyncCheckpointer

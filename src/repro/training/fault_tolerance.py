@@ -69,12 +69,16 @@ class Supervisor:
         max_restarts: int = 3,
         keep_last: int = 3,
         async_save: bool = True,
+        restart_backoff: float = 0.0,
     ):
         self.ckpt_dir = ckpt_dir
         self.save_every = save_every
         self.max_restarts = max_restarts
-        self.writer = ckpt.AsyncWriter(ckpt_dir, keep_last) if async_save else None
+        self.writer = ckpt.AsyncCheckpointer(ckpt_dir, keep_last) if async_save else None
         self.keep_last = keep_last
+        # exponential backoff between restarts: a crash-looping fleet must
+        # not hammer the checkpoint store at full speed
+        self.restart_backoff = float(restart_backoff)
         self.restarts = 0
         self.monitor = StragglerMonitor()
 
@@ -107,6 +111,8 @@ class Supervisor:
                 if self.restarts > self.max_restarts:
                     raise RuntimeError(
                         f"exceeded max_restarts={self.max_restarts}") from e
+                if self.restart_backoff > 0:
+                    time.sleep(self.restart_backoff * 2 ** (self.restarts - 1))
                 step, state = self._restore(state)
         self._save(step, state)
         if self.writer:
