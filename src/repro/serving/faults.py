@@ -229,6 +229,14 @@ class ServingSupervisor:
                     raise
                 if self.backoff > 0:
                     time.sleep(self.backoff * 2 ** (restarts - 1))
+                # the crashed engine may still have a snapshot in flight on
+                # its async writer; let it settle (success or failure) so it
+                # cannot race the rebuilt engine's recovery and writer in
+                # the same snapshots directory
+                try:
+                    engine.writer.wait()
+                except Exception:
+                    pass
                 engine.log.close()
                 if fault.corrupt_newest_snapshot and ckpt.list_steps(
                         os.path.join(self.directory, "snapshots")):

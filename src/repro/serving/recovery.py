@@ -116,10 +116,21 @@ class BlockLog:
         self.next_seq = 0
         segs = self._segments()
         if segs:
-            last = segs[-1]
-            recs, torn_at = self._scan_segment(last, truncate_torn=True)
-            self.next_seq = (recs[-1].seq + 1 if recs
-                             else int(last.split("_")[1].split(".")[0]))
+            # Resume at max(seq)+1 over EVERY segment, not the last record
+            # on disk: a duplicate append that survived a retry sits at the
+            # tail with a stale lower seq, and rotation can leave the last
+            # segment empty -- either would regress the cursor and make new
+            # appends reuse live sequence numbers.
+            max_seq = -1
+            for i, name in enumerate(segs):
+                recs, _ = self._scan_segment(
+                    name, truncate_torn=(i == len(segs) - 1))
+                if recs:
+                    max_seq = max(max_seq, max(r.seq for r in recs))
+            if max_seq >= 0:
+                self.next_seq = max_seq + 1
+            else:
+                self.next_seq = int(segs[-1].split("_")[1].split(".")[0])
         self._open_tail()
 
     # -- segment bookkeeping -------------------------------------------------
@@ -314,10 +325,14 @@ class DurableSketchEngine:
 
     def ingest(self, items: np.ndarray,
                freqs: Optional[np.ndarray] = None) -> None:
-        """WAL-append the raw block, then apply it to the engine."""
+        """WAL-append the raw block, then apply it to the engine.
+
+        Empty blocks are logged too: every operation must map 1:1 onto a
+        WAL sequence number (the supervisor uses ``next_seq`` as its stream
+        cursor), so even a no-op block advances the log.  The wrapped
+        engine skips the empty apply itself.
+        """
         items = np.asarray(items, dtype=np.uint32)
-        if items.shape[0] == 0:
-            return
         if freqs is None:
             freqs = np.ones(items.shape[0], dtype=np.int64)
         freqs = np.asarray(freqs)

@@ -227,7 +227,10 @@ class AsyncCheckpointer:
             try:
                 save(self.directory, step, trees, self.keep_last)
                 return
-            except Exception:
+            except OSError:
+                # only I/O errors are plausibly transient; a serialization
+                # or type error would fail identically on every attempt,
+                # so anything else propagates immediately
                 if attempt == self.retries:
                     raise
                 time.sleep(self.backoff * (2 ** attempt))

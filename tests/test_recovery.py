@@ -307,6 +307,52 @@ def test_wal_duplicate_skipped_gap_refused(tmp_path):
         BlockLog(d).records(0)
 
 
+def test_wal_reopen_after_tail_duplicate_keeps_next_seq(tmp_path):
+    # A survived-retry duplicate sits at the TAIL with a stale lower seq;
+    # reopening must resume at max(seq)+1, not regress the cursor (which
+    # would make new appends reuse live seqs and be dropped as duplicates).
+    d = str(tmp_path)
+    log = BlockLog(d)
+    for i in range(4):
+        log.append_block(np.full((2, 2), i, dtype=np.uint32),
+                         np.ones(2, dtype=np.int64))
+    log.close()
+    duplicate_wal_record(d, 1)
+    log2 = BlockLog(d)
+    assert log2.next_seq == 4
+    log2.append_block(np.full((2, 2), 9, dtype=np.uint32),
+                      np.ones(2, dtype=np.int64))
+    recs = log2.records(0)
+    assert [r.seq for r in recs] == [0, 1, 2, 3, 4]
+    assert np.array_equal(recs[-1].items, np.full((2, 2), 9,
+                                                  dtype=np.uint32))
+    log2.close()
+
+
+def test_empty_block_advances_wal_seq_and_supervisor_cursor(tmp_path):
+    # Every op maps 1:1 onto a WAL seq, empties included -- otherwise the
+    # supervisor's cursor (next_seq) never passes an empty-block op.
+    stream = _stream()
+    spec = _spec(stream)
+    blocks = _blocks(stream)[:4]
+    empty = (blocks[0][0][:0], blocks[0][1][:0])
+    ops = [("block", *blocks[0]), ("block", *empty),
+           ("block", *blocks[1]), ("block", *blocks[2]),
+           ("block", *blocks[3])]
+    ref = SketchTopKEndpoint(spec, KEY)
+    for _, it, fr in ops:
+        ref.ingest(it, fr)
+    sup = ServingSupervisor(str(tmp_path),
+                            lambda: SketchTopKEndpoint(spec, KEY),
+                            snapshot_every=2)
+    eng, rep = sup.run(ops, FaultPlan(crash_after_ops=3, max_crashes=1))
+    assert rep.crashes == 1
+    assert eng.log.next_seq == len(ops)
+    eng.drain()
+    _assert_same_endpoint(ref, eng.backend)
+    eng.close()
+
+
 def test_wal_rotate_and_prune_respects_retained_snapshots(tmp_path):
     stream = _stream()
     spec = _spec(stream)
